@@ -1,0 +1,77 @@
+"""Paper Fig 7: rate-distortion of SZ3-LR / SZ3-Interp / SZ3-Truncation on
+the eight-domain dataset table (§6.2, Table 3 analogues)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    decompress,
+    metrics,
+    sz3_interp,
+    sz3_lr,
+    sz3_truncation,
+)
+
+from . import datasets
+
+REL_EBS = [1e-2, 1e-3, 1e-4, 1e-5]
+
+
+def run(fields=None, seed: int = 3):
+    fields = fields or list(datasets.DOMAIN_FIELDS)
+    out = {}
+    for fname in fields:
+        data = datasets.domain_field(fname, seed)
+        curves = {}
+        for cname, mk in [("SZ3-LR", sz3_lr), ("SZ3-Interp", sz3_interp)]:
+            pts = []
+            for eb in REL_EBS:
+                comp = mk()
+                res = comp.compress(
+                    data, CompressionConfig(mode=ErrorBoundMode.REL, eb=eb)
+                )
+                xhat = decompress(res.blob)
+                rng = float(data.max() - data.min())
+                err = metrics.max_abs_error(data, xhat)
+                assert err <= eb * rng * 1.001, (fname, cname, eb, err)
+                pts.append(
+                    {
+                        "eb": eb,
+                        "bitrate": round(metrics.bit_rate(data, len(res.blob)), 3),
+                        "psnr": round(metrics.psnr(data, xhat), 2),
+                    }
+                )
+            curves[cname] = pts
+        # truncation sweeps kept bytes instead of eb
+        pts = []
+        for k in (1, 2, 3):
+            comp = sz3_truncation(k)
+            res = comp.compress(data)
+            xhat = decompress(res.blob)
+            pts.append(
+                {
+                    "keep_bytes": k,
+                    "bitrate": round(metrics.bit_rate(data, len(res.blob)), 3),
+                    "psnr": round(metrics.psnr(data, xhat), 2),
+                }
+            )
+        curves["SZ3-Truncation"] = pts
+        out[fname] = curves
+    return out
+
+
+def main(full: bool = False):
+    fields = list(datasets.DOMAIN_FIELDS) if full else ["miranda_u", "atm_t2m", "nyx_rho"]
+    res = run(fields)
+    print("field,pipeline,point,bitrate,psnr")
+    for f, curves in res.items():
+        for c, pts in curves.items():
+            for i, p in enumerate(pts):
+                print(f"{f},{c},{i},{p['bitrate']},{p['psnr']}")
+    return res
+
+
+if __name__ == "__main__":
+    main(True)

@@ -1,0 +1,91 @@
+"""Paper §6.1 (Table 2): sustainability comparison.
+
+SZ2 needs >120 functions because it specializes (datatype x dimensionality x
+direction) by hand.  SZ3's abstractions (datatype templates, the
+multidimensional iterator, compile-time composition) collapse that.  This
+benchmark *measures* the same claim on this repo: module counts, LoC per
+module, and the implied SZ2-style expansion factor (how many hand-written
+functions the composition machinery replaces), plus integration overhead
+(bytes of glue per pipeline — the compose functions in pipeline.py).
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+
+DTYPES = 10  # FP32/64, (U)INT8/16/32/64 — paper Table 2
+DIMS = 4
+DIRECTIONS = 2
+
+
+def module_stats():
+    rows = []
+    for f in sorted(SRC.glob("*.py")):
+        tree = ast.parse(f.read_text())
+        funcs = [n for n in ast.walk(tree) if isinstance(n, (ast.FunctionDef,))]
+        classes = [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]
+        loc = len(f.read_text().splitlines())
+        rows.append(
+            {
+                "module": f.name,
+                "loc": loc,
+                "classes": len(classes),
+                "functions": len(funcs),
+            }
+        )
+    return rows
+
+
+def expansion_factor():
+    """Pipeline instances composable from the registered modules vs the
+    SZ2-style per-(dtype x dim x direction) hand specialization count."""
+    from repro.core import encoders, lossless, predictors, preprocess, quantizers
+
+    n_pre = len(preprocess._REGISTRY)
+    n_pred = len(predictors._REGISTRY)
+    n_quant = len(quantizers._REGISTRY)
+    n_enc = len(encoders._REGISTRY)
+    n_ll = len(lossless._REGISTRY)
+    composable = n_pre * n_pred * n_quant * n_enc * n_ll
+    sz2_style = composable * DTYPES * DIMS * DIRECTIONS
+    return {
+        "modules": {
+            "preprocessors": n_pre,
+            "predictors": n_pred,
+            "quantizers": n_quant,
+            "encoders": n_enc,
+            "lossless": n_ll,
+        },
+        "composable_pipelines": composable,
+        "sz2_style_function_count": sz2_style,
+        "actual_driver_loc": _driver_loc(),
+    }
+
+
+def _driver_loc():
+    from repro.core import pipeline
+
+    return len(inspect.getsource(pipeline).splitlines())
+
+
+def main(full: bool = False):
+    rows = module_stats()
+    print("module,loc,classes,functions")
+    total = 0
+    for r in rows:
+        total += r["loc"]
+        print(f"{r['module']},{r['loc']},{r['classes']},{r['functions']}")
+    exp = expansion_factor()
+    print(f"TOTAL core loc,{total},,")
+    print(
+        f"composable_pipelines,{exp['composable_pipelines']},"
+        f"sz2_style_functions,{exp['sz2_style_function_count']}"
+    )
+    return {"modules": rows, "expansion": exp}
+
+
+if __name__ == "__main__":
+    main()

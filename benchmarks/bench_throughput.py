@@ -1,0 +1,69 @@
+"""Paper Fig 8: compression/decompression throughput (MB/s) at REL eb=1e-3.
+
+Includes the device-kernel path (dual-quant Lorenzo via the Pallas ops in
+interpret mode on CPU; compiled on real TPUs) alongside the host pipelines,
+which is this repo's analogue of the paper's SZ3-LR-s speed-oriented build.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    decompress,
+    sz3_interp,
+    sz3_lorenzo,
+    sz3_lr,
+    sz3_truncation,
+)
+
+from . import datasets
+
+
+def run(fields=None, seed: int = 3, repeats: int = 1):
+    fields = fields or ["miranda_u", "nyx_rho", "atm_t2m"]
+    rows = []
+    for fname in fields:
+        data = datasets.domain_field(fname, seed)
+        conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+        for cname, comp in [
+            ("SZ3-Truncation", sz3_truncation(2)),
+            ("SZ3-Lorenzo(dualquant)", sz3_lorenzo()),
+            ("SZ3-LR", sz3_lr()),
+            ("SZ3-Interp", sz3_interp()),
+        ]:
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                res = comp.compress(data, conf)
+            c_dt = (time.perf_counter() - t0) / repeats
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                xhat = decompress(res.blob)
+            d_dt = (time.perf_counter() - t0) / repeats
+            rows.append(
+                {
+                    "field": fname,
+                    "pipeline": cname,
+                    "ratio": round(res.ratio, 2),
+                    "compress_MBps": round(data.nbytes / 1e6 / c_dt, 1),
+                    "decompress_MBps": round(data.nbytes / 1e6 / d_dt, 1),
+                }
+            )
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(list(datasets.DOMAIN_FIELDS) if full else None)
+    print("field,pipeline,ratio,compress_MBps,decompress_MBps")
+    for r in rows:
+        print(
+            f"{r['field']},{r['pipeline']},{r['ratio']},{r['compress_MBps']},{r['decompress_MBps']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main(True)

@@ -1,0 +1,99 @@
+"""Roofline table builder (deliverable g): reads results/dryrun/*/*.json and
+emits the per-(arch x shape x mesh) three-term table + bottleneck + the
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio, as markdown and CSV."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DEFAULT_DIR = Path("results/dryrun")
+
+
+def load(results_dir=DEFAULT_DIR):
+    rows = []
+    for mesh_dir in sorted(Path(results_dir).glob("*")):
+        for f in sorted(mesh_dir.glob("*.json")):
+            if f.name.endswith(".error.json"):
+                rows.append(
+                    {
+                        "file": str(f),
+                        "arch": f.stem.split("__")[0],
+                        "shape": f.stem.split("__")[1].replace(".error", ""),
+                        "mesh": mesh_dir.name,
+                        "status": "ERROR",
+                    }
+                )
+                continue
+            d = json.loads(f.read_text())
+            if "skipped" in d:
+                rows.append(
+                    {
+                        "arch": d["arch"],
+                        "shape": d["shape"],
+                        "mesh": mesh_dir.name,
+                        "status": "SKIP",
+                        "note": d["skipped"][:40],
+                    }
+                )
+                continue
+            r = d["roofline"]
+            tag = ""
+            parts = f.stem.split("__")
+            if len(parts) > 2:
+                tag = parts[2]
+            rows.append(
+                {
+                    "arch": d["arch"],
+                    "shape": d["shape"],
+                    "mesh": mesh_dir.name,
+                    "tag": tag,
+                    "status": "OK",
+                    "compute_s": r["compute_s"],
+                    "memory_s": r["memory_s"],
+                    "collective_s": r["collective_s"],
+                    "bottleneck": r["bottleneck"],
+                    "useful_ratio": r["useful_flops_ratio"],
+                    "compile_s": d["timing"]["compile_s"],
+                    "temp_gb": d["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9,
+                }
+            )
+    return rows
+
+
+def markdown(rows) -> str:
+    hdr = (
+        "| arch | shape | mesh | tag | compute_s | memory_s | collective_s | "
+        "bottleneck | useful FLOPs ratio |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if r["status"] != "OK":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | | — | — | — | "
+                f"{r['status']} | {r.get('note','')} |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('tag','')} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.3f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main(full: bool = False):
+    rows = load()
+    print("arch,shape,mesh,tag,status,compute_s,memory_s,collective_s,bottleneck")
+    for r in rows:
+        if r["status"] == "OK":
+            print(
+                f"{r['arch']},{r['shape']},{r['mesh']},{r.get('tag','')},OK,"
+                f"{r['compute_s']:.5f},{r['memory_s']:.5f},{r['collective_s']:.5f},{r['bottleneck']}"
+            )
+        else:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,{r['status']},,,,")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark registry — one entry per paper table/figure + the framework
+integration benches + the roofline reader.  Prints ``name,us_per_call,
+derived`` CSV lines per the harness contract; detailed per-bench output goes
+to stdout above each summary line.
+
+  PYTHONPATH=src python -m benchmarks.run            # reduced sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+  PYTHONPATH=src python -m benchmarks.run --only gamess
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def _timed(name, fn, full):
+    t0 = time.perf_counter()
+    try:
+        derived = fn(full)
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{dt:.0f},ok")
+        return derived
+    except Exception as e:
+        dt = (time.perf_counter() - t0) * 1e6
+        traceback.print_exc()
+        print(f"{name},{dt:.0f},FAILED:{e}")
+        return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (
+        bench_aps,
+        bench_gamess,
+        bench_integrations,
+        bench_pipelines,
+        bench_sustainability,
+        bench_throughput,
+        roofline,
+    )
+
+    benches = {
+        "gamess_table1_fig4": bench_gamess.main,  # paper Table 1 + Fig 4
+        "aps_fig6": bench_aps.main,  # paper Fig 6
+        "pipelines_fig7": bench_pipelines.main,  # paper Fig 7
+        "throughput_fig8": bench_throughput.main,  # paper Fig 8
+        "sustainability_s6_1": bench_sustainability.main,  # paper §6.1/Table 2
+        "integrations": bench_integrations.main,  # beyond-paper (grad/kv/opt/ckpt)
+        "roofline": roofline.main,  # deliverable (g)
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        _timed(name, fn, args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# In-loop (jittable) integrations of the paper's quantizer module:
+# gradient all-reduce compression, optimizer-moment compression, KV-cache
+# quantization.  Host-side full-pipeline compression lives in repro.core;
+# checkpoint integration in repro.ft.
+from . import grad, kvcache, opt_state  # noqa: F401

@@ -1,0 +1,115 @@
+"""Error-bounded gradient compression for the data-parallel reduction.
+
+Schedule (per train step, inside the dp-manual shard_map region):
+
+  1. flatten the grad tree to one f32 vector, cast bf16;
+  2. psum_scatter over the DP axes (ring reduce-scatter, bf16);
+  3. add the persistent error-feedback residual, quantize the local shard with
+     the paper's linear-scaling quantizer at fixed radius (int8 or packed
+     int4, per-block scales), update the residual (error feedback makes the
+     scheme unbiased over time — the quantization error is *carried*, i.e.
+     exactly SZ's error-bound contract applied temporally);
+  4. all_gather the codes (+ scales), dequantize, unflatten.
+
+Collective bytes per device: ~2N (RS bf16) + N/ratio (AG codes), vs ~4N for a
+bf16 all-reduce — a 1.33x (int8) / 1.6x (int4) cut of the dominant DP
+collective term (EXPERIMENTS.md §Perf records the measured HLO deltas).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 512
+SCALE_FLOOR = 1e-12
+
+
+def _flatten_tree(tree) -> Tuple[jnp.ndarray, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves])
+    return flat, meta
+
+
+def _unflatten_tree(flat, meta):
+    treedef, shapes = meta
+    out, pos = [], 0
+    for shp, dt in shapes:
+        n = 1
+        for s in shp:
+            n *= s
+        out.append(flat[pos : pos + n].reshape(shp).astype(jnp.float32))
+        pos += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def quantize_shard(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric quantization; returns (codes int8, scales f32)."""
+    radius = 127 if bits == 8 else 7
+    pad = (-x.shape[0]) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(xp), axis=-1)
+    scale = jnp.maximum(absmax / radius, SCALE_FLOOR)
+    q = jnp.clip(jnp.rint(xp / scale[:, None]), -radius, radius).astype(jnp.int8)
+    if bits == 4:  # pack two nibbles per byte
+        q = q.reshape(-1, BLOCK // 2, 2)
+        packed = (q[..., 0].astype(jnp.uint8) & 0xF) | (
+            (q[..., 1].astype(jnp.uint8) & 0xF) << 4
+        )
+        return packed.astype(jnp.int8).reshape(-1), scale
+    return q.reshape(-1), scale
+
+
+def dequantize_shard(codes, scale, n: int, bits: int) -> jnp.ndarray:
+    if bits == 4:
+        b = codes.astype(jnp.uint8)
+        lo = (b & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = (b >> 4).astype(jnp.int8)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(-1, BLOCK)
+    else:
+        q = codes.reshape(-1, BLOCK)
+    x = q.astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:n]
+
+
+def compressed_reduce_flat(
+    flat: jnp.ndarray,  # per-replica partial grad vector (local view)
+    feedback: jnp.ndarray,  # local error-feedback shard, (ceil(N/dp),)
+    dp_axes: Sequence[str],
+    bits: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside a dp-manual shard_map: returns (reduced flat vector, new feedback)."""
+    axes = tuple(dp_axes)
+    dp = 1
+    for a in axes:
+        dp *= jax.lax.axis_size(a)
+    n = flat.shape[0]
+    pad = (-n) % dp
+    fp = jnp.pad(flat, (0, pad)).astype(jnp.bfloat16)
+    shard = jax.lax.psum_scatter(fp, axes, scatter_dimension=0, tiled=True)
+    shard = shard.astype(jnp.float32) / dp + feedback
+    codes, scale = quantize_shard(shard, bits)
+    deq_local = dequantize_shard(codes, scale, shard.shape[0], bits)
+    new_feedback = shard - deq_local
+    codes_g = jax.lax.all_gather(codes, axes, tiled=True)
+    scale_g = jax.lax.all_gather(scale, axes, tiled=True)
+    out = dequantize_shard(codes_g, scale_g, n + pad, bits)[:n]
+    return out, new_feedback
+
+
+def init_feedback(params, dp: int) -> jnp.ndarray:
+    n = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    n_pad = n + ((-n) % dp)
+    return jnp.zeros((n_pad,), jnp.float32)
+
+
+def compressed_reduce_tree(grads, feedback, dp_axes, bits):
+    flat, meta = _flatten_tree(grads)
+    out, fb = compressed_reduce_flat(flat, feedback, dp_axes, bits)
+    return _unflatten_tree(out, meta), fb

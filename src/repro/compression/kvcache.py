@@ -1,0 +1,46 @@
+"""KV-cache quantization policy (the paper's quantizer on the serving path).
+
+Per-token-per-head symmetric int8 (radius 127): each appended token's (hd,)
+vector is quantized against its own absmax — the linear-scaling quantizer
+with a per-element bound of scale/2.  ``lm._decode_attn`` applies this inline
+during decode; this module provides the same policy for bulk prefill
+quantization (filling a cache from prompt KV) plus quality metrics for tests
+and benchmarks.  The fused dequant-matmul Pallas kernel lives in
+repro/kernels/kvquant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCALE_FLOOR = 1e-8
+
+
+def quantize_tokens(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., hd) -> (int8 codes (..., hd), scales (...))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, SCALE_FLOOR)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_tokens(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def cache_bytes(seq: int, n_kv: int, hd: int, dtype: str) -> int:
+    """Per-layer per-sequence cache bytes (K+V)."""
+    if dtype == "int8":
+        return 2 * seq * n_kv * (hd + 4)
+    itemsize = 2 if dtype in ("bf16", "bfloat16") else 4
+    return 2 * seq * n_kv * hd * itemsize
+
+
+def quantization_snr_db(x: jnp.ndarray) -> float:
+    q, s = quantize_tokens(x)
+    err = dequantize_tokens(q, s) - x.astype(jnp.float32)
+    p_sig = jnp.mean(x.astype(jnp.float32) ** 2)
+    p_err = jnp.maximum(jnp.mean(err**2), 1e-30)
+    return float(10.0 * jnp.log10(p_sig / p_err))

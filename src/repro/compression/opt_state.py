@@ -1,0 +1,63 @@
+"""Error-bounded 8-bit optimizer-moment compression (paper quantizer, fixed
+radius 127, per-block scales along the last axis).
+
+The value-range-relative error bound per block is scale/2 = absmax/254 —
+i.e. the paper's REL mode with eb ~= 0.2%.  Codes keep the parameter's shape
+(so parameter PartitionSpecs apply unchanged); scales drop the last dim to
+ceil(last/BLOCK) blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+SCALE_FLOOR = 1e-12
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["codes", "scale"],
+    meta_fields=["orig_last"],
+)
+@dataclasses.dataclass
+class Compressed:
+    codes: jnp.ndarray  # int8, shape = param shape (last dim padded)
+    scale: jnp.ndarray  # f32, (*lead, n_blocks)
+    orig_last: int
+
+
+def compress(x: jnp.ndarray) -> Compressed:
+    x = x.astype(jnp.float32)
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = xp.shape[-1] // BLOCK
+    blocks = xp.reshape(xp.shape[:-1] + (nb, BLOCK))
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, SCALE_FLOOR)
+    q = jnp.clip(jnp.rint(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
+    return Compressed(codes=q.reshape(xp.shape), scale=scale, orig_last=last)
+
+
+def decompress(c: Compressed) -> jnp.ndarray:
+    shp = c.codes.shape
+    nb = shp[-1] // BLOCK
+    blocks = c.codes.reshape(shp[:-1] + (nb, BLOCK)).astype(jnp.float32)
+    x = blocks * c.scale[..., None]
+    return x.reshape(shp)[..., : c.orig_last]
+
+
+def init_compressed(p: jnp.ndarray) -> Compressed:
+    return compress(jnp.zeros(p.shape if p.ndim else (1,), jnp.float32))
+
+
+def compression_ratio(p: jnp.ndarray) -> float:
+    """Memory saving vs f32 moments."""
+    c = init_compressed(p)
+    return (p.size * 4) / (c.codes.size + c.scale.size * 4)

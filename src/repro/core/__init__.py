@@ -1,0 +1,51 @@
+"""SZ3 core: modular prediction-based error-bounded lossy compression.
+
+The paper's five-module abstraction (preprocessor -> predictor -> quantizer ->
+encoder -> lossless) composed per §3.3, plus the customized pipelines of §4
+(GAMESS / SZ3-Pastri), §5 (APS adaptive) and §6.2 (LR / Interp / Truncation).
+"""
+from . import encoders, lossless, metrics, predictors, preprocess, quantizers
+from .config import CompressionConfig, ErrorBoundMode
+from .pipeline import (
+    PIPELINES,
+    AdaptiveAPSCompressor,
+    CompressionResult,
+    SZ3Compressor,
+    TruncationCompressor,
+    decompress,
+    parse_header,
+    sz3_aps,
+    sz3_interp,
+    sz3_lorenzo,
+    sz3_lr,
+    sz3_pastri,
+    sz3_truncation,
+    sz_pastri,
+    sz_pastri_zstd,
+)
+
+__all__ = [
+    "CompressionConfig",
+    "ErrorBoundMode",
+    "SZ3Compressor",
+    "TruncationCompressor",
+    "AdaptiveAPSCompressor",
+    "CompressionResult",
+    "decompress",
+    "parse_header",
+    "PIPELINES",
+    "sz3_lr",
+    "sz3_interp",
+    "sz3_lorenzo",
+    "sz3_truncation",
+    "sz_pastri",
+    "sz_pastri_zstd",
+    "sz3_pastri",
+    "sz3_aps",
+    "encoders",
+    "lossless",
+    "metrics",
+    "predictors",
+    "preprocess",
+    "quantizers",
+]

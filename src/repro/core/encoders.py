@@ -1,0 +1,360 @@
+"""Encoder module (paper §3.2 "Encoder", Appendix A.4).
+
+Instances:
+  * HuffmanEncoder      — canonical Huffman [36] over the quantization codes.
+  * FixedHuffmanEncoder — SZ-Pastri's predefined-tree variant [19]: a static
+                          two-sided-geometric code model centred on the zero
+                          bin eliminates tree construction + storage cost.
+  * BitpackEncoder      — fixed-width bit packing (fast path / small alphabets).
+  * RawEncoder          — passthrough (module bypass).
+
+Vectorization (TPU-era adaptation, DESIGN.md §3): encode emits one bitstream
+with *sync points* every ``SYNC`` symbols (a 64-bit bit-offset each, ~0.06
+bit/sym overhead).  Decode then advances all sync lanes in lock-step with
+numpy gathers — the same interleaved-entropy-coder trick production codecs
+use — instead of a pointer-chasing per-symbol loop.  Code lengths are capped
+at 16 bits (zlib-style frequency scaling) so one 2^16 table drives decode.
+"""
+from __future__ import annotations
+
+import abc
+import heapq
+from typing import Dict, Tuple
+
+import numpy as np
+
+_MAXLEN = 16
+_SYNC = 1024
+
+
+# ---------------------------------------------------------------------------
+# canonical Huffman machinery
+# ---------------------------------------------------------------------------
+
+def _huffman_code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Code length per symbol with freq > 0 (classic greedy heap [36])."""
+    sym = np.flatnonzero(freqs)
+    if sym.size == 0:
+        return np.zeros(0, np.uint8), sym
+    if sym.size == 1:
+        return np.ones(1, np.uint8), sym
+    f = freqs[sym].astype(np.int64)
+    while True:
+        heap = [(int(fi), i, None) for i, fi in enumerate(f)]
+        heapq.heapify(heap)
+        nodes = {}
+        counter = len(heap)
+        while len(heap) > 1:
+            a = heapq.heappop(heap)
+            b = heapq.heappop(heap)
+            nodes[counter] = (a[1], b[1])
+            heapq.heappush(heap, (a[0] + b[0], counter, None))
+            counter += 1
+        lengths = np.zeros(counter, np.uint8)
+        root = heap[0][1]
+        stack = [(root, 0)]
+        while stack:
+            node, depth = stack.pop()
+            if node in nodes:
+                l, r = nodes[node]
+                stack.append((l, depth + 1))
+                stack.append((r, depth + 1))
+            else:
+                lengths[node] = max(1, depth)
+        lens = lengths[: sym.size]
+        if lens.max() <= _MAXLEN:
+            return lens, sym
+        # cap: flatten the distribution and rebuild (zlib heuristic)
+        f = (f + 1) // 2
+
+
+def _canonical_codes(lens_sorted: np.ndarray) -> np.ndarray:
+    """Canonical codes for symbols already sorted by (len, symbol)."""
+    codes = np.zeros(lens_sorted.size, np.uint32)
+    # code_i = (code_{i-1} + 1) << (len_i - len_{i-1}); alphabet is small so a
+    # python recurrence is fine (the data-sized paths are all vectorized)
+    shifted = np.zeros(lens_sorted.size, np.int64)
+    shifted[1:] = (lens_sorted[1:] - lens_sorted[:-1]).astype(np.int64)
+    c = 0
+    for i in range(lens_sorted.size):
+        if i:
+            c = (c + 1) << int(shifted[i])
+        codes[i] = c
+    return codes
+
+
+class _HuffTable:
+    """Built codec state: per-symbol (code, len) + 2^16 decode table."""
+
+    def __init__(self, symbols: np.ndarray, lengths: np.ndarray):
+        order = np.lexsort((symbols, lengths))
+        self.sym_sorted = symbols[order]
+        self.len_sorted = lengths[order].astype(np.uint8)
+        self.codes_sorted = _canonical_codes(self.len_sorted)
+        # encode-side lookup: dense over max symbol value
+        top = int(symbols.max()) + 1 if symbols.size else 1
+        self.enc_code = np.zeros(top, np.uint32)
+        self.enc_len = np.zeros(top, np.uint8)
+        self.enc_code[self.sym_sorted] = self.codes_sorted
+        self.enc_len[self.sym_sorted] = self.len_sorted
+        # decode-side: canonical codes tile [0, 2^MAXLEN) contiguously
+        reps = (1 << (_MAXLEN - self.len_sorted.astype(np.int64)))
+        self.dec_sym = np.repeat(self.sym_sorted, reps)
+        self.dec_len = np.repeat(self.len_sorted, reps)
+        full = 1 << _MAXLEN
+        if 0 < self.dec_sym.size < full:
+            # incomplete tree only happens for the 1-symbol alphabet; any
+            # window then decodes to that symbol, so padding is safe.
+            pad = full - self.dec_sym.size
+            self.dec_sym = np.concatenate([self.dec_sym, np.full(pad, self.dec_sym[-1])])
+            self.dec_len = np.concatenate([self.dec_len, np.full(pad, self.dec_len[-1], np.uint8)])
+
+
+def _bits_of_codes(codes: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """MSB-first bits of each code, concatenated (vectorized)."""
+    n = codes.size
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    maxlen = int(lens.max())
+    shifts = np.arange(maxlen - 1, -1, -1, dtype=np.uint32)
+    # bit matrix (n, maxlen): bit j of code i = (code >> (len-1-j)) & 1
+    j = np.arange(maxlen, dtype=np.int64)[None, :]
+    shift = lens.astype(np.int64)[:, None] - 1 - j
+    valid = shift >= 0
+    bits = (codes[:, None].astype(np.uint64) >> np.where(valid, shift, 0).astype(np.uint64)) & 1
+    return bits[valid].astype(np.uint8)
+
+
+def _windows_at(buf: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    """16-bit big-endian windows starting at arbitrary bit positions."""
+    byte = (pos >> 3).astype(np.int64)
+    b0 = buf[byte].astype(np.uint32)
+    b1 = buf[byte + 1].astype(np.uint32)
+    b2 = buf[byte + 2].astype(np.uint32)
+    v = (b0 << 16) | (b1 << 8) | b2
+    return (v >> (8 - (pos & 7)).astype(np.uint32)) & np.uint32(0xFFFF)
+
+
+def _encode_stream(syms: np.ndarray, table: _HuffTable) -> bytes:
+    lens = table.enc_len[syms]
+    codes = table.enc_code[syms]
+    if syms.size and int(lens.min()) == 0:
+        raise ValueError("symbol outside Huffman alphabet")
+    offsets = np.zeros(syms.size + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    sync = offsets[:-1:_SYNC].astype(np.int64)
+    total_bits = int(offsets[-1])
+    # chunked bit materialization keeps peak memory ~ n x maxlen / nchunks
+    chunks = []
+    step = 1 << 20
+    for s in range(0, syms.size, step):
+        chunks.append(_bits_of_codes(codes[s : s + step], lens[s : s + step]))
+    bits = np.concatenate(chunks) if chunks else np.zeros(0, np.uint8)
+    payload = np.packbits(bits).tobytes()
+    head = np.asarray([syms.size, total_bits, sync.size], np.int64).tobytes()
+    return head + sync.tobytes() + payload
+
+
+def _decode_stream(buf: bytes, offset: int, table: _HuffTable) -> Tuple[np.ndarray, int]:
+    head = np.frombuffer(buf, np.int64, count=3, offset=offset)
+    n, total_bits, n_sync = int(head[0]), int(head[1]), int(head[2])
+    pos = offset + 24
+    sync = np.frombuffer(buf, np.int64, count=n_sync, offset=pos).copy()
+    pos += n_sync * 8
+    nbytes = (total_bits + 7) // 8
+    stream = np.frombuffer(buf, np.uint8, count=nbytes, offset=pos)
+    pos += nbytes
+    if n == 0:
+        return np.zeros(0, np.int64), pos - offset
+    stream = np.concatenate([stream, np.zeros(3, np.uint8)])
+    out = np.empty(n, np.int64)
+    lanes = sync  # current bit position per lane
+    n_lanes = lanes.size
+    lane_base = np.arange(n_lanes, dtype=np.int64) * _SYNC
+    remaining = np.minimum(n - lane_base, _SYNC)
+    for k in range(_SYNC):
+        active = k < remaining
+        if not active.any():
+            break
+        w = _windows_at(stream, lanes[active])
+        syms = table.dec_sym[w]
+        out[lane_base[active] + k] = syms
+        lanes[active] += table.dec_len[w]
+    return out, pos - offset
+
+
+# ---------------------------------------------------------------------------
+# Encoder interface + instances
+# ---------------------------------------------------------------------------
+
+class Encoder(abc.ABC):
+    """Paper Appendix A.4: encode(bins)->bytes / decode(bytes,len)->bins.
+
+    save()/load() (tree metadata) is folded into the byte stream each encoder
+    emits, which keeps the pipeline driver generic."""
+
+    name = "abstract"
+
+    @abc.abstractmethod
+    def encode(self, codes: np.ndarray) -> bytes: ...
+
+    @abc.abstractmethod
+    def decode(self, buf: bytes, n: int) -> np.ndarray: ...
+
+
+class RawEncoder(Encoder):
+    name = "raw"
+
+    def encode(self, codes):
+        arr = np.ascontiguousarray(codes)
+        head = np.asarray([arr.itemsize], np.int64).tobytes()
+        return head + arr.tobytes()
+
+    def decode(self, buf, n):
+        itemsize = int(np.frombuffer(buf, np.int64, count=1)[0])
+        dt = {2: np.uint16, 4: np.uint32, 8: np.int64}[itemsize]
+        return np.frombuffer(buf, dt, count=n, offset=8).copy()
+
+
+class BitpackEncoder(Encoder):
+    """Fixed-width packing; width = bits needed for the max code present."""
+
+    name = "bitpack"
+
+    def encode(self, codes):
+        arr = np.ascontiguousarray(codes).astype(np.uint32).reshape(-1)
+        width = max(1, int(arr.max()).bit_length()) if arr.size else 1
+        shifts = np.arange(width - 1, -1, -1, dtype=np.uint32)
+        bits = ((arr[:, None] >> shifts[None, :]) & 1).astype(np.uint8)
+        payload = np.packbits(bits.reshape(-1)).tobytes()
+        head = np.asarray([arr.size, width], np.int64).tobytes()
+        return head + payload
+
+    def decode(self, buf, n):
+        head = np.frombuffer(buf, np.int64, count=2)
+        count, width = int(head[0]), int(head[1])
+        nbits = count * width
+        raw = np.frombuffer(buf, np.uint8, count=(nbits + 7) // 8, offset=16)
+        bits = np.unpackbits(raw, count=nbits).reshape(count, width)
+        shifts = np.arange(width - 1, -1, -1, dtype=np.uint32)
+        return (bits.astype(np.uint32) << shifts[None, :]).sum(axis=1)
+
+
+class HuffmanEncoder(Encoder):
+    """Canonical Huffman built from the observed code frequencies [36]."""
+
+    name = "huffman"
+
+    def encode(self, codes):
+        arr = np.ascontiguousarray(codes).reshape(-1).astype(np.int64)
+        if arr.size == 0:
+            return np.asarray([0], np.int64).tobytes()
+        vals, inv = np.unique(arr, return_inverse=True)
+        freqs = np.bincount(inv)
+        lens, present = _huffman_code_lengths(freqs)
+        # alphabet header: K, symbol values (int64), lengths (uint8)
+        symbols = np.arange(vals.size, dtype=np.int64)
+        table = _HuffTable(symbols, lens)
+        stream = _encode_stream(inv.astype(np.int64), table)
+        head = np.asarray([vals.size], np.int64).tobytes()
+        return head + vals.tobytes() + lens.tobytes() + stream
+
+    def decode(self, buf, n):
+        k = int(np.frombuffer(buf, np.int64, count=1)[0])
+        if k == 0:
+            return np.zeros(0, np.int64)
+        pos = 8
+        vals = np.frombuffer(buf, np.int64, count=k, offset=pos)
+        pos += k * 8
+        lens = np.frombuffer(buf, np.uint8, count=k, offset=pos)
+        pos += k
+        table = _HuffTable(np.arange(k, dtype=np.int64), lens.copy())
+        idx, _ = _decode_stream(buf, pos, table)
+        if idx.size != n:
+            raise ValueError(f"huffman stream length mismatch {idx.size} != {n}")
+        return vals[idx]
+
+
+class FixedHuffmanEncoder(Encoder):
+    """Predefined tree (SZ-Pastri [19]): no build or storage cost.
+
+    Model: two-sided geometric over the distance from the zero bin (symbol
+    ``radius``), with code 0 (unpredictable) and far tails folded into an
+    escape class that is followed by a raw 32-bit value.
+    """
+
+    name = "fixed_huffman"
+    _cache: Dict[Tuple[int, float], "_HuffTable"] = {}
+
+    def __init__(self, radius: int = 32768, decay: float = 0.7, span: int = 256):
+        self.radius = radius
+        self.decay = decay
+        self.span = span  # symbols within [radius-span, radius+span] get codes
+
+    def _table(self) -> _HuffTable:
+        key = (self.radius, self.decay, self.span)
+        if key not in FixedHuffmanEncoder._cache:
+            # alphabet: 0 (unpred), [radius-span, radius+span], escape symbol
+            core = np.arange(self.radius - self.span, self.radius + self.span + 1)
+            symbols = np.concatenate([[0], core, [-1]])  # -1 = escape
+            dist = np.abs(core - self.radius).astype(np.float64)
+            w = np.power(self.decay, np.minimum(dist, 96.0))  # clamp underflow
+            freqs = np.concatenate([[w.sum() * 0.01], w, [w.sum() * 0.001]])
+            scaled = np.maximum(1, (freqs / freqs.max() * (1 << 30)).astype(np.int64))
+            lens, present = _huffman_code_lengths(scaled)
+            FixedHuffmanEncoder._cache[key] = (
+                _HuffTable(np.arange(symbols.size, dtype=np.int64), lens),
+                symbols,
+            )
+        return FixedHuffmanEncoder._cache[key]
+
+    def encode(self, codes):
+        table, symbols = self._table()
+        arr = np.ascontiguousarray(codes).reshape(-1).astype(np.int64)
+        lo, hi = self.radius - self.span, self.radius + self.span
+        in_core = (arr >= lo) & (arr <= hi)
+        is_zero = arr == 0
+        escape = ~(in_core | is_zero)
+        # map to alphabet indices: 0->0, core->1.., escape->last
+        idx = np.where(is_zero, 0, np.where(in_core, arr - lo + 1, symbols.size - 1))
+        stream = _encode_stream(idx.astype(np.int64), table)
+        esc_vals = arr[escape].astype(np.int64)
+        head = np.asarray(
+            [self.radius, self.span, int(esc_vals.size)], np.int64
+        ).tobytes()
+        head += np.asarray([self.decay], np.float64).tobytes()
+        return head + esc_vals.tobytes() + stream
+
+    def decode(self, buf, n):
+        head = np.frombuffer(buf, np.int64, count=3)
+        radius, span, n_esc = int(head[0]), int(head[1]), int(head[2])
+        decay = float(np.frombuffer(buf, np.float64, count=1, offset=24)[0])
+        pos = 32
+        esc_vals = np.frombuffer(buf, np.int64, count=n_esc, offset=pos)
+        pos += n_esc * 8
+        enc = FixedHuffmanEncoder(radius=radius, span=span, decay=decay)
+        table, symbols = enc._table()
+        idx, _ = _decode_stream(buf, pos, table)
+        if idx.size != n:
+            raise ValueError("fixed huffman stream length mismatch")
+        lo = radius - span
+        out = np.where(idx == 0, 0, idx - 1 + lo)
+        esc_mask = idx == symbols.size - 1
+        out[esc_mask] = esc_vals
+        return out
+
+
+_REGISTRY = {
+    "raw": RawEncoder,
+    "bitpack": BitpackEncoder,
+    "huffman": HuffmanEncoder,
+    "fixed_huffman": FixedHuffmanEncoder,
+}
+
+
+def register(name: str, cls) -> None:
+    _REGISTRY[name] = cls
+
+
+def make(name: str, **kw) -> Encoder:
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,106 @@
+"""Lossless-compressor module (paper §3.2 "Lossless Compressor", Appendix A.5).
+
+The module acts as a proxy around state-of-the-art lossless backends; SZ3
+integrates ZSTD / GZIP / BLOSC — here we bind the offline-available analogues
+(zstandard, zlib, lzma) behind the same two-method interface so new backends
+plug in without touching the pipeline driver.
+"""
+from __future__ import annotations
+
+import abc
+import lzma
+import zlib
+from typing import Dict, Type
+
+try:
+    import zstandard as _zstd
+
+    _HAVE_ZSTD = True
+except Exception:  # pragma: no cover - zstandard is installed in this env
+    _HAVE_ZSTD = False
+
+
+class LosslessBackend(abc.ABC):
+    """Paper Appendix A.5: compress(bytes)->bytes / decompress(bytes)->bytes."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def compress(self, data: bytes) -> bytes: ...
+
+    @abc.abstractmethod
+    def decompress(self, data: bytes) -> bytes: ...
+
+
+class Passthrough(LosslessBackend):
+    """Module bypass (paper §1: "speed-ratio tradeoffs (module bypass)")."""
+
+    name = "none"
+
+    def compress(self, data: bytes) -> bytes:
+        return bytes(data)
+
+    def decompress(self, data: bytes) -> bytes:
+        return bytes(data)
+
+
+class Zstd(LosslessBackend):
+    name = "zstd"
+
+    def __init__(self, level: int = 3):
+        if not _HAVE_ZSTD:
+            raise RuntimeError("zstandard not available")
+        self.level = level
+        self._c = _zstd.ZstdCompressor(level=level)
+        self._d = _zstd.ZstdDecompressor()
+
+    def compress(self, data: bytes) -> bytes:
+        return self._c.compress(data)
+
+    def decompress(self, data: bytes) -> bytes:
+        return self._d.decompress(data)
+
+
+class Gzip(LosslessBackend):
+    name = "gzip"
+
+    def __init__(self, level: int = 6):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+class Lzma(LosslessBackend):
+    name = "lzma"
+
+    def __init__(self, preset: int = 1):
+        self.preset = preset
+
+    def compress(self, data: bytes) -> bytes:
+        return lzma.compress(data, preset=self.preset)
+
+    def decompress(self, data: bytes) -> bytes:
+        return lzma.decompress(data)
+
+
+_REGISTRY: Dict[str, Type[LosslessBackend]] = {
+    "none": Passthrough,
+    "zstd": Zstd,
+    "gzip": Gzip,
+    "lzma": Lzma,
+}
+
+
+def register(name: str, cls: Type[LosslessBackend]) -> None:
+    """Extension point: integrate a new lossless routine (paper §3.2)."""
+    _REGISTRY[name] = cls
+
+
+def make(name: str, **kw) -> LosslessBackend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown lossless backend {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,83 @@
+"""Compression quality / rate metrics used throughout the paper's evaluation.
+
+Bit-rate, compression ratio, PSNR, NRMSE, max error — matching the paper's
+definitions (§4.3: ``bitrate = bits / cr``; PSNR w.r.t. value range).
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+Array = np.ndarray
+
+
+def _np(x) -> Array:
+    return np.asarray(x)
+
+
+def compression_ratio(original_nbytes: int, compressed_nbytes: int) -> float:
+    if compressed_nbytes <= 0:
+        return float("inf")
+    return original_nbytes / compressed_nbytes
+
+
+def bit_rate(original: Union[Array, int], compressed_nbytes: int, itemsize: int = None) -> float:
+    """Bits per element after compression (paper: bits/cr)."""
+    if isinstance(original, (int, np.integer)):
+        n = int(original)
+    else:
+        arr = _np(original)
+        n = arr.size
+        itemsize = arr.itemsize if itemsize is None else itemsize
+    if n == 0:
+        return 0.0
+    return compressed_nbytes * 8.0 / n
+
+
+def max_abs_error(original, decompressed) -> float:
+    a, b = _np(original), _np(decompressed)
+    if a.size == 0:
+        return 0.0
+    return float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64))))
+
+
+def max_pw_rel_error(original, decompressed, eps: float = 0.0) -> float:
+    a, b = _np(original).astype(np.float64), _np(decompressed).astype(np.float64)
+    denom = np.abs(a)
+    mask = denom > eps
+    if not mask.any():
+        return 0.0
+    return float(np.max(np.abs(a[mask] - b[mask]) / denom[mask]))
+
+
+def mse(original, decompressed) -> float:
+    a, b = _np(original).astype(np.float64), _np(decompressed).astype(np.float64)
+    return float(np.mean((a - b) ** 2))
+
+
+def psnr(original, decompressed) -> float:
+    """Peak signal-to-noise ratio w.r.t. the data value range (SZ convention)."""
+    a = _np(original).astype(np.float64)
+    rng = float(a.max() - a.min())
+    m = mse(original, decompressed)
+    if m == 0:
+        return float("inf")
+    if rng == 0:
+        return float("inf") if m == 0 else -10.0 * np.log10(m)
+    return 20.0 * np.log10(rng) - 10.0 * np.log10(m)
+
+
+def nrmse(original, decompressed) -> float:
+    a = _np(original).astype(np.float64)
+    rng = float(a.max() - a.min())
+    if rng == 0:
+        return 0.0
+    return float(np.sqrt(mse(original, decompressed)) / rng)
+
+
+def value_range(x) -> float:
+    a = _np(x)
+    if a.size == 0:
+        return 0.0
+    return float(a.max() - a.min())

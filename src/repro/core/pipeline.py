@@ -1,0 +1,384 @@
+"""Compression-pipeline composition (paper §3.3, Algorithm 1).
+
+A compressor is a 5-tuple of module instances.  The driver below is the
+paper's Algorithm 1, array-vectorized: it never names a concrete module —
+composition is data ("spec"), mirroring SZ3's compile-time template
+polymorphism with trace/construction-time polymorphism (DESIGN.md §4.1).
+
+The container format is self-describing: the header records the module spec,
+so ``decompress(blob)`` rebuilds the exact pipeline.  Named factory pipelines:
+
+  sz3_lr          — composite(Lorenzo+regression) + linear quant + Huffman + zstd   (= SZ2 [8])
+  sz3_interp      — interpolation + linear quant + Huffman + zstd                   ([17])
+  sz3_truncation  — byte truncation, all other stages bypassed
+  sz3_pastri      — pattern + UNPRED-AWARE quant + Huffman + zstd                   (paper §4)
+  sz_pastri       — pattern + linear quant + fixed Huffman (no lossless)            (baseline [19])
+  sz3_aps         — error-bound-adaptive APS pipeline                               (paper §5)
+  sz3_lorenzo     — pure dual-quant Lorenzo (TPU-native fast path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from . import encoders as enc_mod
+from . import lossless as ll_mod
+from . import predictors as pred_mod
+from . import preprocess as pre_mod
+from . import quantizers as quant_mod
+from .config import CompressionConfig, ErrorBoundMode
+
+_MAGIC = b"SZ3J"
+_VERSION = 1
+
+
+def _clean_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
+    """Coerce numpy scalars so msgpack accepts the header."""
+    out = {}
+    for k, v in meta.items():
+        if isinstance(v, (np.integer,)):
+            out[k] = int(v)
+        elif isinstance(v, (np.floating,)):
+            out[k] = float(v)
+        elif isinstance(v, np.ndarray):
+            out[k] = v.tolist()
+        else:
+            out[k] = v
+    return out
+
+
+@dataclasses.dataclass
+class CompressionResult:
+    blob: bytes
+    ratio: float
+    codes: Optional[np.ndarray] = None  # quantization integers (paper Fig 3)
+    meta: Optional[Dict[str, Any]] = None
+
+
+class SZ3Compressor:
+    """The general compressor of paper Algorithm 1."""
+
+    kind = "sz3"
+
+    def __init__(
+        self,
+        preprocessor: pre_mod.Preprocessor = None,
+        predictor: pred_mod.Predictor = None,
+        quantizer: quant_mod.QuantizerBase = None,
+        encoder: enc_mod.Encoder = None,
+        lossless: ll_mod.LosslessBackend = None,
+        conf: CompressionConfig = None,
+    ):
+        self.preprocessor = preprocessor or pre_mod.Identity()
+        self.predictor = predictor or pred_mod.LorenzoPredictor()
+        self.quantizer = quantizer or quant_mod.LinearScaleQuantizer()
+        self.encoder = encoder or enc_mod.HuffmanEncoder()
+        self.lossless = lossless or ll_mod.Zstd()
+        self.conf = conf or CompressionConfig()
+
+    # -- spec (for the self-describing container) ---------------------------
+    def spec(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "preprocessor": self.preprocessor.name,
+            "predictor": self.predictor.name,
+            "quantizer": self.quantizer.name,
+            "quant_radius": self.quantizer.radius,
+            "encoder": self.encoder.name,
+            "lossless": self.lossless.name,
+        }
+
+    @staticmethod
+    def from_spec(spec: Dict[str, Any]) -> "SZ3Compressor":
+        return SZ3Compressor(
+            preprocessor=pre_mod.make(spec["preprocessor"]),
+            predictor=pred_mod.make(spec["predictor"]),
+            quantizer=quant_mod.make(spec["quantizer"], radius=spec["quant_radius"]),
+            encoder=enc_mod.make(spec["encoder"]),
+            lossless=ll_mod.make(spec["lossless"]),
+        )
+
+    # -- Algorithm 1 ---------------------------------------------------------
+    def compress(
+        self, data: np.ndarray, conf: CompressionConfig = None, with_stats: bool = False
+    ) -> CompressionResult:
+        conf = conf or self.conf
+        data = np.asarray(data)
+        if data.dtype not in (np.float32, np.float64):
+            data = data.astype(np.float32)
+        pdata, conf2, pre_meta = self.preprocessor.forward(data, conf)  # line 1
+        rng = float(pdata.max() - pdata.min()) if pdata.size else 0.0
+        absmax = float(np.abs(pdata).max()) if pdata.size else 0.0
+        abs_eb = conf2.resolve_abs_eb(rng, absmax)
+        if abs_eb <= 0:
+            abs_eb = np.finfo(np.float64).tiny
+        self.quantizer.begin(abs_eb, pdata.dtype)
+        codes, pred_meta = self.predictor.compress(pdata, self.quantizer, conf2)  # 2-5
+        enc_bytes = self.encoder.encode(codes)  # lines 9-10
+        q_bytes = self.quantizer.save()  # line 8
+        header = {
+            "v": _VERSION,
+            "spec": self.spec(),
+            "shape": list(data.shape),
+            "pshape": list(pdata.shape),
+            "dtype": data.dtype.str,
+            "pdtype": pdata.dtype.str,
+            "mode": conf.mode.value,
+            "eb": float(conf.eb),
+            "abs_eb": float(abs_eb),
+            "block_size": int(conf2.block_size),
+            "interp_kind": conf2.interp_kind,
+            "lorenzo_order": int(conf2.lorenzo_order),
+            "n_codes": int(codes.size),
+            "enc_len": len(enc_bytes),
+            "q_len": len(q_bytes),
+            "pre_meta": _clean_meta(pre_meta),
+            "pred_meta": _clean_meta(pred_meta),
+        }
+        hbytes = msgpack.packb(header, use_bin_type=True)
+        body = self.lossless.compress(enc_bytes + q_bytes)  # line 11
+        blob = (
+            _MAGIC
+            + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
+            + hbytes
+            + body
+        )
+        ratio = data.nbytes / max(1, len(blob))
+        return CompressionResult(
+            blob=blob,
+            ratio=ratio,
+            codes=codes if with_stats else None,
+            meta=pred_meta if with_stats else None,
+        )
+
+
+def parse_header(blob: bytes) -> Tuple[Dict[str, Any], int]:
+    if blob[:4] != _MAGIC:
+        raise ValueError("not an SZ3J container")
+    lens = np.frombuffer(blob, np.int64, count=2, offset=4)
+    hlen = int(lens[0])
+    header = msgpack.unpackb(blob[20 : 20 + hlen], raw=False)
+    return header, 20 + hlen
+
+
+def decompress(blob: bytes) -> np.ndarray:
+    """Self-describing decompression — rebuilds the pipeline from the header."""
+    header, body_off = parse_header(blob)
+    spec = header["spec"]
+    if spec["kind"] == "truncation":
+        return TruncationCompressor._decompress_body(blob, header, body_off)
+    comp = SZ3Compressor.from_spec(spec)
+    body = comp.lossless.decompress(blob[body_off:])
+    enc_bytes = body[: header["enc_len"]]
+    q_bytes = body[header["enc_len"] : header["enc_len"] + header["q_len"]]
+    pdtype = np.dtype(header["pdtype"])
+    comp.quantizer.begin(header["abs_eb"], pdtype)
+    comp.quantizer.load(q_bytes)
+    codes = comp.encoder.decode(enc_bytes, header["n_codes"])
+    conf = CompressionConfig(
+        mode=ErrorBoundMode(header["mode"]),
+        eb=header["eb"],
+        block_size=header["block_size"],
+        interp_kind=header["interp_kind"],
+        lorenzo_order=header["lorenzo_order"],
+        quant_radius=spec["quant_radius"],
+    )
+    pdata = comp.predictor.decompress(
+        np.asarray(codes),
+        tuple(header["pshape"]),
+        pdtype,
+        comp.quantizer,
+        conf,
+        header["pred_meta"],
+    )
+    data = comp.preprocessor.inverse(pdata, conf, header["pre_meta"])
+    return data.astype(np.dtype(header["dtype"])).reshape(tuple(header["shape"]))
+
+
+class TruncationCompressor:
+    """SZ3-Truncation (paper §6.2): keep the k most-significant bytes of each
+    value, bypass every other stage.  ~1 GB/s-class throughput in the paper;
+    unbounded absolute error (bounded relative error per exponent)."""
+
+    kind = "truncation"
+
+    def __init__(self, keep_bytes: int = 2, lossless: str = "none"):
+        self.keep_bytes = keep_bytes
+        self.lossless = ll_mod.make(lossless)
+
+    def compress(self, data, conf=None, with_stats=False) -> CompressionResult:
+        data = np.asarray(data)
+        itemsize = data.dtype.itemsize
+        k = min(self.keep_bytes, itemsize)
+        # big-endian view so byte 0 is the most significant
+        be = data.astype(data.dtype.newbyteorder(">"))
+        raw = be.view(np.uint8).reshape(-1, itemsize)
+        kept = np.ascontiguousarray(raw[:, :k]).tobytes()
+        body = self.lossless.compress(kept)
+        header = {
+            "v": _VERSION,
+            "spec": {"kind": "truncation", "k": k, "lossless": self.lossless.name},
+            "shape": list(data.shape),
+            "dtype": data.dtype.str,
+        }
+        hbytes = msgpack.packb(header, use_bin_type=True)
+        blob = (
+            _MAGIC
+            + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
+            + hbytes
+            + body
+        )
+        return CompressionResult(blob=blob, ratio=data.nbytes / max(1, len(blob)))
+
+    @staticmethod
+    def _decompress_body(blob, header, body_off):
+        spec = header["spec"]
+        k = spec["k"]
+        dt = np.dtype(header["dtype"])
+        shape = tuple(header["shape"])
+        n = int(np.prod(shape)) if shape else 1
+        kept = ll_mod.make(spec["lossless"]).decompress(blob[body_off:])
+        raw = np.zeros((n, dt.itemsize), np.uint8)
+        raw[:, :k] = np.frombuffer(kept, np.uint8).reshape(n, k)
+        be = raw.reshape(-1).view(dt.newbyteorder(">"))
+        return be.astype(dt).reshape(shape)
+
+
+class AdaptiveAPSCompressor:
+    """The APS adaptive pipeline (paper §5.2, Fig 5).
+
+    error bound >= threshold : 3-D multialgorithm (Lorenzo+regression) pipeline
+    error bound <  threshold : transpose so time is innermost, 1-D Lorenzo,
+                               unpred-aware quantizer with the restricted bin
+                               (eb clamped to 0.5 => exact for integer counts),
+                               fixed Huffman, zstd.
+    """
+
+    kind = "aps"
+
+    def __init__(self, threshold: float = 0.5, time_axis: int = 0):
+        self.threshold = threshold
+        self.time_axis = time_axis
+
+    def _low_pipeline(self, ndim: int) -> SZ3Compressor:
+        perm = tuple(i for i in range(ndim) if i != self.time_axis) + (self.time_axis,)
+        return SZ3Compressor(
+            preprocessor=pre_mod.Transpose(perm=perm, flatten=True),
+            predictor=pred_mod.LorenzoPredictor(order=1),
+            quantizer=quant_mod.UnpredAwareQuantizer(),
+            encoder=enc_mod.FixedHuffmanEncoder(),
+            lossless=ll_mod.Zstd(),
+        )
+
+    def _high_pipeline(self) -> SZ3Compressor:
+        return SZ3Compressor(
+            predictor=pred_mod.CompositePredictor(),
+            quantizer=quant_mod.LinearScaleQuantizer(),
+            encoder=enc_mod.HuffmanEncoder(),
+            lossless=ll_mod.Zstd(),
+        )
+
+    def compress(self, data, conf: CompressionConfig = None, with_stats=False):
+        conf = conf or CompressionConfig()
+        data = np.asarray(data)
+        rng = float(data.max() - data.min()) if data.size else 0.0
+        absmax = float(np.abs(data).max()) if data.size else 0.0
+        abs_eb = conf.resolve_abs_eb(rng, absmax)
+        if abs_eb < self.threshold:
+            # restricted quantization bin: integer-valued data becomes
+            # lossless (paper: "SZ3-APS turns out to be lossless in this case")
+            is_integral = bool(np.all(np.rint(data) == data))
+            eff = conf.replace(
+                mode=ErrorBoundMode.ABS, eb=0.5 if is_integral else abs_eb
+            )
+            return self._low_pipeline(data.ndim).compress(data, eff, with_stats)
+        eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
+        return self._high_pipeline().compress(data, eff, with_stats)
+
+
+# ---------------------------------------------------------------------------
+# named pipeline factories (paper §6.2 + §4 + §5)
+# ---------------------------------------------------------------------------
+
+def sz3_lr(**kw) -> SZ3Compressor:
+    return SZ3Compressor(
+        predictor=pred_mod.CompositePredictor(),
+        quantizer=quant_mod.LinearScaleQuantizer(),
+        encoder=enc_mod.HuffmanEncoder(),
+        lossless=ll_mod.Zstd(),
+        **kw,
+    )
+
+
+def sz3_interp(kind: str = "cubic", **kw) -> SZ3Compressor:
+    return SZ3Compressor(
+        predictor=pred_mod.InterpolationPredictor(kind=kind),
+        quantizer=quant_mod.LinearScaleQuantizer(),
+        encoder=enc_mod.HuffmanEncoder(),
+        lossless=ll_mod.Zstd(),
+        **kw,
+    )
+
+
+def sz3_lorenzo(order: int = 1, **kw) -> SZ3Compressor:
+    return SZ3Compressor(
+        predictor=pred_mod.LorenzoPredictor(order=order),
+        quantizer=quant_mod.LinearScaleQuantizer(),
+        encoder=enc_mod.HuffmanEncoder(),
+        lossless=ll_mod.Zstd(),
+        **kw,
+    )
+
+
+def sz3_truncation(keep_bytes: int = 2) -> TruncationCompressor:
+    return TruncationCompressor(keep_bytes=keep_bytes)
+
+
+def sz_pastri(pattern_size: int = None) -> SZ3Compressor:
+    """Baseline SZ-Pastri [19]: linear quantizer (raw unpredictables), fixed
+    Huffman, NO lossless stage."""
+    return SZ3Compressor(
+        predictor=pred_mod.PatternPredictor(pattern_size=pattern_size),
+        quantizer=quant_mod.LinearScaleQuantizer(),
+        encoder=enc_mod.FixedHuffmanEncoder(),
+        lossless=ll_mod.Passthrough(),
+    )
+
+
+def sz_pastri_zstd(pattern_size: int = None) -> SZ3Compressor:
+    """SZ-Pastri-with-zstd (paper Table 1 middle rows)."""
+    return SZ3Compressor(
+        predictor=pred_mod.PatternPredictor(pattern_size=pattern_size),
+        quantizer=quant_mod.LinearScaleQuantizer(),
+        encoder=enc_mod.FixedHuffmanEncoder(),
+        lossless=ll_mod.Zstd(),
+    )
+
+
+def sz3_pastri(pattern_size: int = None) -> SZ3Compressor:
+    """SZ3-Pastri (paper §4.2): unpred-aware quantizer + lossless stage."""
+    return SZ3Compressor(
+        predictor=pred_mod.PatternPredictor(pattern_size=pattern_size),
+        quantizer=quant_mod.UnpredAwareQuantizer(),
+        encoder=enc_mod.HuffmanEncoder(),
+        lossless=ll_mod.Zstd(),
+    )
+
+
+def sz3_aps(threshold: float = 0.5, time_axis: int = 0) -> AdaptiveAPSCompressor:
+    return AdaptiveAPSCompressor(threshold=threshold, time_axis=time_axis)
+
+
+PIPELINES = {
+    "sz3_lr": sz3_lr,
+    "sz3_interp": sz3_interp,
+    "sz3_lorenzo": sz3_lorenzo,
+    "sz3_truncation": sz3_truncation,
+    "sz_pastri": sz_pastri,
+    "sz_pastri_zstd": sz_pastri_zstd,
+    "sz3_pastri": sz3_pastri,
+    "sz3_aps": sz3_aps,
+}

@@ -1,0 +1,151 @@
+"""Preprocessor module (paper §3.2 "Preprocessor", Appendix A.1).
+
+Instances:
+  * Identity        — module bypass.
+  * LogTransform    — pointwise-relative-bound -> absolute-bound conversion in
+                      the log domain (paper ref [20]); signs/zeros side-channel.
+  * Transpose       — layout alteration; the APS pipeline's "treat the 3-D
+                      stack as 256x256 1-D time series" preprocessor (paper §5.2).
+  * Linearize       — collapse to 1-D (unstructured-grid support, paper §1).
+
+``forward`` transforms data in a separate buffer (the paper's note about
+keeping original data intact) and returns updated config + serializable meta;
+``inverse`` reverses it during decompression.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from .config import CompressionConfig, ErrorBoundMode
+
+
+class Preprocessor(abc.ABC):
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def forward(
+        self, data: np.ndarray, conf: CompressionConfig
+    ) -> Tuple[np.ndarray, CompressionConfig, Dict[str, Any]]: ...
+
+    @abc.abstractmethod
+    def inverse(
+        self, data: np.ndarray, conf: CompressionConfig, meta: Dict[str, Any]
+    ) -> np.ndarray: ...
+
+
+class Identity(Preprocessor):
+    name = "identity"
+
+    def forward(self, data, conf):
+        return data, conf, {}
+
+    def inverse(self, data, conf, meta):
+        return data
+
+
+class Transpose(Preprocessor):
+    """Permute axes (optionally flattening) before compression.
+
+    The APS pipeline (paper §5.2) moves the time axis innermost so a 1-D
+    Lorenzo predictor follows the high-correlation direction.
+    """
+
+    name = "transpose"
+
+    def __init__(self, perm: Tuple[int, ...] = None, flatten: bool = False):
+        self.perm = perm
+        self.flatten = flatten
+
+    def forward(self, data, conf):
+        perm = self.perm if self.perm is not None else tuple(range(data.ndim))[::-1]
+        out = np.ascontiguousarray(np.transpose(data, perm))
+        meta = {"perm": list(perm), "shape": list(out.shape)}
+        if self.flatten:
+            out = out.reshape(-1)
+        return out, conf, meta
+
+    def inverse(self, data, conf, meta):
+        perm = tuple(meta["perm"])
+        shape = tuple(meta["shape"])
+        out = data.reshape(shape)
+        inv = np.argsort(perm)
+        return np.ascontiguousarray(np.transpose(out, inv))
+
+
+class Linearize(Preprocessor):
+    """Rearrange to a 1-D array (unstructured-grid support, paper §1)."""
+
+    name = "linearize"
+
+    def forward(self, data, conf):
+        return data.reshape(-1), conf, {"shape": list(data.shape)}
+
+    def inverse(self, data, conf, meta):
+        return data.reshape(tuple(meta["shape"]))
+
+
+class LogTransform(Preprocessor):
+    """Pointwise-relative error bounds via the logarithmic domain (ref [20]).
+
+    x -> log2|x|, compressed with abs bound eb' = log2(1 + eb) (so the
+    reconstructed ratio x_hat/x is within [1-eb, 1+eb]); signs are stored as a
+    packed bitmap and exact zeros / denormal-tiny values as an exact-positions
+    bitmap (reconstructed as 0, which satisfies any pointwise-relative bound).
+    """
+
+    name = "log"
+
+    def __init__(self, zero_threshold: float = 0.0):
+        self.zero_threshold = zero_threshold
+
+    def forward(self, data, conf):
+        if conf.mode != ErrorBoundMode.PW_REL:
+            raise ValueError("LogTransform requires ErrorBoundMode.PW_REL")
+        flat = data.reshape(-1)
+        thr = self.zero_threshold
+        zero_mask = np.abs(flat) <= thr
+        sign_mask = flat < 0
+        safe = np.where(zero_mask, 1.0, np.abs(flat))
+        logged = np.log2(safe).astype(data.dtype).reshape(data.shape)
+        # log2(1 - eb) is the tighter side; use it so both directions hold.
+        eb = float(conf.eb)
+        if not (0.0 < eb < 1.0):
+            raise ValueError("pointwise-relative eb must be in (0, 1)")
+        abs_eb = min(np.log2(1.0 + eb), -np.log2(1.0 - eb))
+        new_conf = conf.replace(mode=ErrorBoundMode.ABS, eb=float(abs_eb))
+        meta = {
+            "signs": np.packbits(sign_mask).tobytes(),
+            "zeros": np.packbits(zero_mask).tobytes(),
+            "n": int(flat.size),
+            "orig_mode": conf.mode.value,
+            "orig_eb": float(conf.eb),
+        }
+        return logged, new_conf, meta
+
+    def inverse(self, data, conf, meta):
+        n = int(meta["n"])
+        signs = np.unpackbits(np.frombuffer(meta["signs"], np.uint8), count=n).astype(bool)
+        zeros = np.unpackbits(np.frombuffer(meta["zeros"], np.uint8), count=n).astype(bool)
+        flat = np.exp2(data.reshape(-1).astype(np.float64))
+        flat = np.where(signs, -flat, flat)
+        flat = np.where(zeros, 0.0, flat)
+        return flat.astype(data.dtype).reshape(data.shape)
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "transpose": Transpose,
+    "linearize": Linearize,
+    "log": LogTransform,
+}
+
+
+def register(name: str, cls) -> None:
+    _REGISTRY[name] = cls
+
+
+def make(name: str, **kw) -> Preprocessor:
+    return _REGISTRY[name](**kw)

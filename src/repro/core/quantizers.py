@@ -1,0 +1,402 @@
+"""Quantizer module (paper §3.2 "Quantizer", Appendix A.3).
+
+The quantizer is the only lossy stage.  Two families:
+
+  * LinearScaleQuantizer — SZ's classic linear-scaling quantizer: equal bins of
+    width 2*eb; prediction errors become bin indices; out-of-range points are
+    "unpredictable" and stored exactly (raw IEEE bytes), as in SZ1.4/SZ2.
+  * UnpredAwareQuantizer — the paper's §4.2 contribution (SZ3-Pastri): the
+    same binning, but unpredictable points are exponent-aligned to the error
+    bound, converted to integers, and stored in BITPLANE order (MSB plane
+    first).  The significant planes are runs of zeros, so the downstream
+    lossless stage compresses them well (+20-40% ratio on GAMESS, Table 1).
+
+Vectorization note (TPU adaptation): the paper's ``quantize(data, pred)`` is a
+scalar call inside Algorithm 1's loop; here every method is array-at-a-time.
+The element order of unpredictable side-storage is the flattened scan order of
+each quantize() call, which compression and decompression share, so the
+sequential save()/load() semantics of the paper are preserved exactly.
+
+Both an IEEE-float interface (``quantize``/``recover``) and an integer
+interface (``prequantize``/``quantize_int_diff``/...) are provided; the latter
+serves the dual-quantization Lorenzo path (cuSZ-style, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import abc
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+_INT64_MAX = np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------------
+# Bitplane codec (the unpred-aware quantizer's storage format; the device
+# analogue is kernels/bitplane — a Pallas 32-lane transpose).
+# ---------------------------------------------------------------------------
+
+def bitplane_encode(vals: np.ndarray) -> bytes:
+    """Encode int64 values as sign bitmap + MSB->LSB magnitude bitplanes."""
+    vals = np.asarray(vals, np.int64).reshape(-1)
+    n = vals.size
+    header = np.empty(2, np.int64)
+    if n == 0:
+        header[:] = (0, 0)
+        return header.tobytes()
+    signs = vals < 0
+    mags = np.abs(vals).astype(np.uint64)
+    maxmag = int(mags.max())
+    nplanes = max(1, maxmag.bit_length())
+    header[:] = (n, nplanes)
+    chunks = [header.tobytes(), np.packbits(signs).tobytes()]
+    # MSB plane first: long zero-runs land together for the lossless stage.
+    for p in range(nplanes - 1, -1, -1):
+        plane = ((mags >> np.uint64(p)) & np.uint64(1)).astype(np.uint8)
+        chunks.append(np.packbits(plane).tobytes())
+    return b"".join(chunks)
+
+
+def bitplane_decode(buf: bytes, offset: int = 0) -> Tuple[np.ndarray, int]:
+    """Inverse of :func:`bitplane_encode`; returns (values, bytes_consumed)."""
+    header = np.frombuffer(buf, np.int64, count=2, offset=offset)
+    n, nplanes = int(header[0]), int(header[1])
+    pos = offset + 16
+    if n == 0:
+        return np.zeros(0, np.int64), pos - offset
+    nbytes_plane = (n + 7) // 8
+    signs = np.unpackbits(
+        np.frombuffer(buf, np.uint8, count=nbytes_plane, offset=pos), count=n
+    ).astype(bool)
+    pos += nbytes_plane
+    mags = np.zeros(n, np.uint64)
+    for p in range(nplanes - 1, -1, -1):
+        plane = np.unpackbits(
+            np.frombuffer(buf, np.uint8, count=nbytes_plane, offset=pos), count=n
+        )
+        mags |= plane.astype(np.uint64) << np.uint64(p)
+        pos += nbytes_plane
+    vals = mags.astype(np.int64)
+    vals[signs] = -vals[signs]
+    return vals, pos - offset
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+class QuantizerBase(abc.ABC):
+    """Array-at-a-time analogue of the paper's QuantizerInterface."""
+
+    name = "abstract"
+
+    def __init__(self, radius: int = 32768):
+        self.radius = int(radius)
+        self._eb: Optional[float] = None
+        self._dtype: Optional[np.dtype] = None
+        # compression-side accumulation / decompression-side cursor state
+        self._unpred_int: List[np.ndarray] = []
+        self._unpred_raw: List[np.ndarray] = []
+        self._escape_bits: List[np.ndarray] = []
+        self._dec_int: Optional[np.ndarray] = None
+        self._dec_raw: Optional[np.ndarray] = None
+        self._dec_escape: Optional[np.ndarray] = None
+        self._cursor_int = 0
+        self._cursor_raw = 0
+        self._cursor_esc = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def begin(self, abs_eb: float, dtype) -> None:
+        """Reset state for one (de)compression run with a resolved ABS bound."""
+        if not np.isfinite(abs_eb) or abs_eb <= 0:
+            raise ValueError(f"absolute error bound must be positive, got {abs_eb}")
+        self._eb = float(abs_eb)
+        self._dtype = np.dtype(dtype)
+        self._unpred_int, self._unpred_raw, self._escape_bits = [], [], []
+        self._dec_int = self._dec_raw = self._dec_escape = None
+        self._cursor_int = self._cursor_raw = self._cursor_esc = 0
+
+    @property
+    def eb(self) -> float:
+        assert self._eb is not None, "quantizer used before begin()"
+        return self._eb
+
+    @property
+    def code_dtype(self):
+        return np.uint16 if self.radius <= (1 << 15) else np.uint32
+
+    # -- float-domain interface (classic SZ predict->quantize loop) ---------
+    def quantize(self, x: np.ndarray, pred: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Quantize prediction errors; returns (codes, reconstruction).
+
+        codes == 0 marks unpredictable points whose payload is accumulated for
+        save(); reconstruction is what the decompressor will also compute, so
+        feedback predictors can consume it directly.
+        """
+        eb, r = self.eb, self.radius
+        x64 = np.asarray(x, np.float64)
+        p64 = np.asarray(pred, np.float64)
+        d = x64 - p64
+        q = np.rint(d / (2.0 * eb))
+        in_range = np.abs(q) < r
+        qi = np.where(in_range, q, 0.0).astype(np.int64)
+        recon = (p64 + qi.astype(np.float64) * (2.0 * eb)).astype(self._dtype)
+        ok = in_range & (np.abs(recon.astype(np.float64) - x64) <= eb)
+        codes = np.where(ok, qi + r, 0).astype(self.code_dtype)
+        if not ok.all():
+            mask = ~ok
+            recon = self._store_unpred_float(x64, p64, mask, recon)
+        return codes, recon
+
+    def recover(self, pred: np.ndarray, codes: np.ndarray) -> np.ndarray:
+        """Reverse of quantize() (paper's ``recover``)."""
+        eb, r = self.eb, self.radius
+        p64 = np.asarray(pred, np.float64)
+        q = codes.astype(np.int64) - r
+        recon = (p64 + q.astype(np.float64) * (2.0 * eb)).astype(self._dtype)
+        mask = codes == 0
+        if mask.any():
+            recon = self._load_unpred_float(p64, mask, recon)
+        return recon
+
+    # -- integer-domain interface (dual-quantization Lorenzo path) ----------
+    def prequantize(self, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """x -> nearest multiple of 2*eb as int64; the only lossy step.
+
+        Returns (qint, recon, fail_mask) where fail positions (bound broken by
+        dtype-cast rounding or int64 overflow — pathological eb) must be
+        patched with exact values by the caller.
+        """
+        eb = self.eb
+        x64 = np.asarray(x, np.float64)
+        scaled = x64 / (2.0 * eb)
+        overflow = np.abs(scaled) >= float(_INT64_MAX // 2)
+        q = np.rint(np.where(overflow, 0.0, scaled)).astype(np.int64)
+        recon = (q.astype(np.float64) * (2.0 * eb)).astype(self._dtype)
+        fail = overflow | (np.abs(recon.astype(np.float64) - x64) > eb)
+        return q, recon, fail
+
+    def dequantize_int(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float64) * (2.0 * self.eb)).astype(self._dtype)
+
+    def quantize_int_diff(self, d: np.ndarray) -> np.ndarray:
+        """Quantize integer Lorenzo differences; overflow -> unpredictable."""
+        r = self.radius
+        ok = np.abs(d) < r
+        codes = np.where(ok, d + r, 0).astype(self.code_dtype)
+        if not ok.all():
+            self._store_unpred_int(d[~ok])
+        return codes
+
+    def recover_int_diff(self, codes: np.ndarray) -> np.ndarray:
+        d = codes.astype(np.int64) - self.radius
+        mask = codes == 0
+        if mask.any():
+            d[mask] = self._load_unpred_int(int(mask.sum()))
+        return d
+
+    # -- unpredictable-point storage policy (subclass hook) -----------------
+    @abc.abstractmethod
+    def _store_unpred_float(self, x64, p64, mask, recon) -> np.ndarray: ...
+
+    @abc.abstractmethod
+    def _load_unpred_float(self, p64, mask, recon) -> np.ndarray: ...
+
+    def _store_unpred_int(self, d: np.ndarray) -> None:
+        self._unpred_int.append(np.asarray(d, np.int64))
+
+    # -- direct registration/emission for wavefront (scan) predictors -------
+    def absorb_unpred(self, x64: np.ndarray, p64: np.ndarray) -> None:
+        """Register unpredictable (x, pred) pairs discovered inside a scan.
+
+        The scan applied the reconstruction policy itself; this records the
+        payload so save() emits it (positions follow scan order)."""
+        mask = np.ones(x64.shape, bool)
+        recon = np.zeros(x64.shape, self._dtype)
+        self._store_unpred_float(
+            np.asarray(x64, np.float64), np.asarray(p64, np.float64), mask, recon
+        )
+
+    def emit_unpred_channels(
+        self, count: int
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Decompression-side: (q_aligned, escape_mask, raw_values) channels.
+
+        For each unpredictable point in scan order the decoder reconstructs
+        ``raw`` where ``escape`` else ``pred + q * 2*eb`` (pred is only known
+        inside the decode scan, hence the channel split)."""
+        if isinstance(self, LinearScaleQuantizer):
+            raw = self._dec_raw[self._cursor_raw : self._cursor_raw + count]
+            self._cursor_raw += count
+            return (
+                np.zeros(count, np.float64),
+                np.ones(count, bool),
+                np.asarray(raw, np.float64),
+            )
+        esc = self._dec_escape[self._cursor_esc : self._cursor_esc + count]
+        self._cursor_esc += count
+        esc = np.asarray(esc, bool)
+        n_int = int((~esc).sum())
+        n_raw = int(esc.sum())
+        q_small = self._load_unpred_int(n_int)
+        raw_small = self._dec_raw[self._cursor_raw : self._cursor_raw + n_raw]
+        self._cursor_raw += n_raw
+        q = np.zeros(count, np.float64)
+        raw = np.zeros(count, np.float64)
+        q[~esc] = q_small.astype(np.float64)
+        raw[esc] = raw_small
+        return q, esc, raw
+
+    def _load_unpred_int(self, count: int) -> np.ndarray:
+        out = self._dec_int[self._cursor_int : self._cursor_int + count]
+        if out.size != count:
+            raise ValueError("unpredictable stream exhausted — corrupt payload")
+        self._cursor_int += count
+        return out
+
+    # -- save/load (paper Appendix A.3) --------------------------------------
+    def save(self) -> bytes:
+        """Serialize unpredictable payload (+ any subclass metadata)."""
+        ints = (
+            np.concatenate(self._unpred_int)
+            if self._unpred_int
+            else np.zeros(0, np.int64)
+        )
+        raws = (
+            np.concatenate(self._unpred_raw)
+            if self._unpred_raw
+            else np.zeros(0, np.float64)
+        )
+        escs = (
+            np.concatenate(self._escape_bits)
+            if self._escape_bits
+            else np.zeros(0, np.uint8)
+        )
+        int_payload = self._encode_int_stream(ints)
+        raw_payload = raws.astype(np.float64).tobytes()
+        esc_payload = np.packbits(escs).tobytes() if escs.size else b""
+        head = np.asarray(
+            [len(int_payload), raws.size, escs.size], np.int64
+        ).tobytes()
+        return head + int_payload + raw_payload + esc_payload
+
+    def load(self, buf: bytes) -> None:
+        head = np.frombuffer(buf, np.int64, count=3)
+        int_len, n_raw, n_esc = int(head[0]), int(head[1]), int(head[2])
+        pos = 24
+        self._dec_int = self._decode_int_stream(buf[pos : pos + int_len])
+        pos += int_len
+        self._dec_raw = np.frombuffer(buf, np.float64, count=n_raw, offset=pos)
+        pos += n_raw * 8
+        if n_esc:
+            nb = (n_esc + 7) // 8
+            self._dec_escape = np.unpackbits(
+                np.frombuffer(buf, np.uint8, count=nb, offset=pos), count=n_esc
+            ).astype(bool)
+        else:
+            self._dec_escape = np.zeros(0, bool)
+        self._cursor_int = self._cursor_raw = self._cursor_esc = 0
+
+    # how the int64 unpredictable stream is laid out — THE subclass difference
+    def _encode_int_stream(self, ints: np.ndarray) -> bytes:
+        return ints.tobytes()
+
+    def _decode_int_stream(self, payload: bytes) -> np.ndarray:
+        return np.frombuffer(payload, np.int64).copy()
+
+
+class LinearScaleQuantizer(QuantizerBase):
+    """SZ1.4/SZ2 linear-scaling quantizer: unpredictables stored as raw IEEE
+    values (exact reconstruction, zero further compressibility — the behaviour
+    the paper's Fig 3/§4.2 identifies as the ratio bottleneck on GAMESS)."""
+
+    name = "linear"
+
+    def _store_unpred_float(self, x64, p64, mask, recon):
+        self._unpred_raw.append(x64[mask])
+        recon = recon.copy()
+        recon[mask] = x64[mask].astype(self._dtype)
+        return recon
+
+    def _load_unpred_float(self, p64, mask, recon):
+        count = int(mask.sum())
+        vals = self._dec_raw[self._cursor_raw : self._cursor_raw + count]
+        if vals.size != count:
+            raise ValueError("unpredictable stream exhausted — corrupt payload")
+        self._cursor_raw += count
+        recon = recon.copy()
+        recon[mask] = vals.astype(self._dtype)
+        return recon
+
+
+class UnpredAwareQuantizer(QuantizerBase):
+    """Paper §4.2: exponent-align unpredictable prediction errors to the error
+    bound, store the resulting integers in MSB->LSB bitplane order.
+
+    Float-domain unpredictables become q = rint((x - pred)/(2*eb)) (error
+    <= eb); the rare points where a dtype cast would still break the bound
+    escape to raw storage via a 1-bit side channel.  Integer-domain
+    unpredictables (dual-quant path) are bitplane-coded directly.
+    """
+
+    name = "unpred_aware"
+
+    def _store_unpred_float(self, x64, p64, mask, recon):
+        eb = self.eb
+        d = x64[mask] - p64[mask]
+        scaled = d / (2.0 * eb)
+        overflow = np.abs(scaled) >= float(_INT64_MAX // 2)
+        q = np.rint(np.where(overflow, 0.0, scaled)).astype(np.int64)
+        cand = (p64[mask] + q.astype(np.float64) * (2.0 * eb)).astype(self._dtype)
+        bad = overflow | (np.abs(cand.astype(np.float64) - x64[mask]) > eb)
+        # escape channel: 1 = raw IEEE value, 0 = bitplane integer
+        self._escape_bits.append(bad.astype(np.uint8))
+        self._unpred_int.append(q[~bad])
+        if bad.any():
+            self._unpred_raw.append(x64[mask][bad])
+            cand = cand.copy()
+            cand[bad] = x64[mask][bad].astype(self._dtype)
+        recon = recon.copy()
+        recon[mask] = cand
+        return recon
+
+    def _load_unpred_float(self, p64, mask, recon):
+        count = int(mask.sum())
+        esc = self._dec_escape[self._cursor_esc : self._cursor_esc + count]
+        if esc.size != count:
+            raise ValueError("escape stream exhausted — corrupt payload")
+        self._cursor_esc += count
+        n_int = int((~esc).sum())
+        q = self._load_unpred_int(n_int)
+        vals = np.empty(count, np.float64)
+        preds = p64[mask]
+        vals[~esc] = preds[~esc] + q.astype(np.float64) * (2.0 * self.eb)
+        if esc.any():
+            n_raw = int(esc.sum())
+            raw = self._dec_raw[self._cursor_raw : self._cursor_raw + n_raw]
+            self._cursor_raw += n_raw
+            vals[esc] = raw
+        recon = recon.copy()
+        recon[mask] = vals.astype(self._dtype)
+        return recon
+
+    def _encode_int_stream(self, ints: np.ndarray) -> bytes:
+        return bitplane_encode(ints)
+
+    def _decode_int_stream(self, payload: bytes) -> np.ndarray:
+        vals, _ = bitplane_decode(payload)
+        return vals
+
+
+_REGISTRY = {
+    "linear": LinearScaleQuantizer,
+    "unpred_aware": UnpredAwareQuantizer,
+}
+
+
+def register(name: str, cls) -> None:
+    _REGISTRY[name] = cls
+
+
+def make(name: str, **kw) -> QuantizerBase:
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLM, SyntheticEncDec, SyntheticVLM, make_pipeline
+
+__all__ = ["DataConfig", "SyntheticLM", "SyntheticEncDec", "SyntheticVLM", "make_pipeline"]

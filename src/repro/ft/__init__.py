@@ -1,0 +1,9 @@
+from .checkpoint import CheckpointManager, CheckpointPolicy, LeafPolicy
+from .elastic import make_elastic_mesh, replan, reshard_state, validate_divisibility
+from .heartbeat import HeartbeatMonitor, Decision
+
+__all__ = [
+    "CheckpointManager", "CheckpointPolicy", "LeafPolicy",
+    "make_elastic_mesh", "replan", "reshard_state", "validate_divisibility",
+    "HeartbeatMonitor", "Decision",
+]

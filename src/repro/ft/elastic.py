@@ -1,0 +1,84 @@
+"""Elastic scaling: restore any checkpoint onto any surviving device set.
+
+Because checkpoints are mesh-agnostic (full host arrays per leaf), elastic
+restart is: pick the best mesh for the survivors -> rebuild plan/specs ->
+device_put each leaf with its new NamedSharding.  Data-pipeline determinism
+(repro/data) makes the restart bit-reproducible modulo DP-width-dependent
+reduction order.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..models.common import ModelConfig
+from ..parallel.plan import ParallelPlan
+
+
+def best_mesh_shape(n_devices: int, prefer_model: int = 16) -> Tuple[int, int]:
+    """Largest (data, model) grid using <= n_devices, model as close to
+    ``prefer_model`` as divisibility allows (TP axis prefers powers of two)."""
+    best = (1, 1)
+    m = prefer_model
+    while m >= 1:
+        d = n_devices // m
+        if d >= 1 and d * m > best[0] * best[1]:
+            best = (d, m)
+        m //= 2
+    return best
+
+
+def make_elastic_mesh(devices=None, prefer_model: int = 16):
+    devices = devices if devices is not None else jax.devices()
+    d, m = best_mesh_shape(len(devices), prefer_model)
+    n = d * m
+    import numpy as np
+
+    arr = np.asarray(devices[:n]).reshape(d, m)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def replan(cfg: ModelConfig, old_plan: ParallelPlan, mesh) -> ParallelPlan:
+    """Carry the old policy onto a new mesh (drop axes the mesh lost)."""
+    axes = set(mesh.shape)
+    batch_axes = tuple(a for a in old_plan.batch_axes if a in axes) or ("data",)
+    fsdp_axes = tuple(a for a in old_plan.fsdp_axes if a in axes)
+    seq_axes = tuple(a for a in old_plan.seq_axes if a in axes)
+    import dataclasses
+
+    return dataclasses.replace(
+        old_plan,
+        mesh=mesh,
+        batch_axes=batch_axes,
+        fsdp_axes=fsdp_axes,
+        seq_axes=seq_axes,
+    )
+
+
+def reshard_state(host_state, spec_tree, mesh):
+    """device_put every leaf with its (new-mesh) sharding."""
+
+    def put(leaf, spec):
+        s = spec if isinstance(spec, PartitionSpec) else PartitionSpec()
+        return jax.device_put(leaf, NamedSharding(mesh, s))
+
+    return jax.tree.map(
+        put, host_state, spec_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+    )
+
+
+def validate_divisibility(cfg: ModelConfig, plan: ParallelPlan) -> Dict[str, bool]:
+    """Pre-flight checks before committing to a new mesh size."""
+    tp = plan.tp
+    checks = {
+        "d_ff % tp": cfg.d_ff % tp == 0 if cfg.d_ff else True,
+        "padded_vocab % tp": cfg.padded_vocab % tp == 0,
+        "d_model % fsdp": True,
+    }
+    for a in plan.fsdp_axes:
+        checks["d_model % fsdp"] &= cfg.d_model % plan.axis_size(a) == 0
+    return checks

@@ -1,0 +1,3 @@
+from .ops import bitplane_decode, bitplane_encode, ref_decode, ref_encode
+
+__all__ = ["bitplane_encode", "bitplane_decode", "ref_encode", "ref_decode"]

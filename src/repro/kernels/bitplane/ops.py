@@ -1,0 +1,41 @@
+"""Jit'd wrappers for the bitplane transpose kernel (padding + flat API)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitplane_encode(vals: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Flat uint32 values -> (32, ceil(n/32)) plane words (plane p = row p)."""
+    n = vals.shape[0]
+    pad = (-n) % (32 * 512)
+    v = jnp.pad(vals.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
+    return _k.encode(v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def bitplane_decode(words: jnp.ndarray, n: int, *, interpret: bool = True) -> jnp.ndarray:
+    v = _k.decode(words, interpret=interpret).reshape(-1)
+    return v[:n]
+
+
+def ref_encode(vals):
+    n = vals.shape[0]
+    pad = (-n) % 32
+    v = jnp.pad(jnp.asarray(vals, jnp.uint32), (0, pad)).reshape(-1, 32)
+    return _ref.encode(v)
+
+
+def ref_decode(words, n):
+    return _ref.decode(jnp.asarray(words, jnp.uint32)).reshape(-1)[:n]

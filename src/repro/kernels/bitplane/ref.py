@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the bitplane transpose kernel.
+
+Layout contract: values are viewed as (R, 32) uint32 where R = n/32 (the k
+axis indexes 32 consecutive values); the transpose emits words
+``out[p, r] = sum_k ((v[r, k] >> p) & 1) << k`` — i.e. plane p's bits for the
+r-th group of 32 values, packed little-endian into one uint32 word.  Planes
+are emitted MSB-first by the caller slicing ``out[::-1]`` when serializing
+(the unpred-aware quantizer's order).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def encode(v: jnp.ndarray) -> jnp.ndarray:
+    """v: (R, 32) uint32 -> (32, R) uint32 plane words."""
+    assert v.ndim == 2 and v.shape[1] == 32
+    p = jnp.arange(32, dtype=jnp.uint32)[:, None, None]
+    k = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = (v[None, :, :] >> p) & jnp.uint32(1)
+    return (bits << k).sum(axis=2, dtype=jnp.uint32)
+
+
+def decode(w: jnp.ndarray) -> jnp.ndarray:
+    """w: (32, R) uint32 plane words -> (R, 32) uint32 values."""
+    assert w.ndim == 2 and w.shape[0] == 32
+    k = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    p = jnp.arange(32, dtype=jnp.uint32)[:, None, None]
+    bits = (w[:, :, None] >> k) & jnp.uint32(1)
+    return (bits << p).sum(axis=0, dtype=jnp.uint32)

@@ -1,0 +1,3 @@
+from .ops import kv_dequant_matmul, kv_quantize, ref_dequant_matmul, ref_quantize
+
+__all__ = ["kv_quantize", "kv_dequant_matmul", "ref_quantize", "ref_dequant_matmul"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the KV-cache quantization kernels.
+
+Contract:
+  quantize : per-channel symmetric int8.  scale[c] = absmax(x[:, c]) / 127
+             (clamped to a tiny floor), q = clip(rint(x / scale), -127, 127).
+             This is the SZ linear-scaling quantizer specialized to a fixed
+             radius of 127 with per-channel bounds — the paper's quantizer
+             module re-instantiated for the serving path (DESIGN.md §2).
+  dequant_matmul : C = A @ (Q.astype(f32) * scale[None, :]) with f32
+             accumulation — the attention read path (scores @ dequant(V) or
+             q @ dequant(K)^T after layout prep).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SCALE_FLOOR = 1e-8
+
+
+def quantize(x: jnp.ndarray):
+    """x: (T, C) f32/bf16 -> (q int8 (T, C), scale f32 (C,))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    scale = jnp.maximum(absmax / 127.0, SCALE_FLOOR)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[None, :]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[None, :]
+
+
+def dequant_matmul(a: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """a: (M, K) f32; q: (K, N) int8; scale: (N,) -> (M, N) f32."""
+    b = q.astype(jnp.float32) * scale[None, :]
+    return jnp.dot(a.astype(jnp.float32), b, preferred_element_type=jnp.float32)

@@ -1,0 +1,15 @@
+from .ops import (
+    lorenzo_decode,
+    lorenzo_encode,
+    lorenzo_roundtrip_check,
+    ref_decode,
+    ref_encode,
+)
+
+__all__ = [
+    "lorenzo_encode",
+    "lorenzo_decode",
+    "lorenzo_roundtrip_check",
+    "ref_encode",
+    "ref_decode",
+]

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the fused Lorenzo kernels.
+
+Handles padding to tile multiples, the int32 fast-path guard
+(|x| / (2*eb) must stay below 2^30; otherwise callers use the core numpy
+int64 path), backend selection (interpret=True on CPU, compiled on TPU), and
+unpredictable-point bookkeeping for the device compression path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as _k
+from . import ref as _ref
+
+INT32_SAFE = float(1 << 30)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2d(x: jnp.ndarray, bm: int, bn: int) -> Tuple[jnp.ndarray, Tuple[int, int]]:
+    R, C = x.shape
+    pr, pc = (-R) % bm, (-C) % bn
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x, (R, C)
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "radius", "mode", "interpret"))
+def lorenzo_encode(
+    x: jnp.ndarray,
+    *,
+    eb: float,
+    radius: int = 32768,
+    mode: str = "2d",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused prequant+Lorenzo encode. Returns (codes, raw_diffs), both int32,
+    cropped to the input shape.  mode: "1d" (row-independent) | "2d"."""
+    assert x.ndim == 2, "reshape to 2-D before calling (rows, fastest-axis)"
+    bm = 256 if x.shape[0] >= 256 else max(8, 8 * (x.shape[0] // 8) or 8)
+    if mode == "1d":
+        bn = 512 if x.shape[1] >= 512 else 128
+        xp, (R, C) = _pad2d(x, bm, bn)
+        codes, draw = _k.encode_1d(xp, eb, radius, bm=bm, bn=bn, interpret=interpret)
+    else:
+        xp, (R, C) = _pad2d(x, bm, 128)
+        codes, draw = _k.encode_2d(xp, eb, radius, bm=bm, interpret=interpret)
+    return codes[:R, :C], draw[:R, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "mode", "interpret"))
+def lorenzo_decode(
+    d: jnp.ndarray, *, eb: float, mode: str = "2d", interpret: bool = True
+) -> jnp.ndarray:
+    """Inverse (cumsum) + dequant.  ``d`` must contain the raw diffs with
+    unpredictable positions already substituted."""
+    assert d.ndim == 2
+    bm = 256 if d.shape[0] >= 256 else max(8, 8 * (d.shape[0] // 8) or 8)
+    if mode == "1d":
+        bn = 512 if d.shape[1] >= 512 else 128
+        dp, (R, C) = _pad2d(d, bm, bn)
+        out = _k.decode_1d(dp, eb, bm=bm, bn=bn, interpret=interpret)
+    else:
+        dp, (R, C) = _pad2d(d, bm, 128)
+        out = _k.decode_2d(dp, eb, bm=bm, interpret=interpret)
+    return out[:R, :C]
+
+
+def lorenzo_roundtrip_check(x: np.ndarray, eb: float) -> dict:
+    """Convenience: encode+decode through the kernel path, report bound/ratio
+    stats (used by tests and the device checkpoint path)."""
+    x = jnp.asarray(x, jnp.float32)
+    assert float(jnp.max(jnp.abs(x))) / (2 * eb) < INT32_SAFE, "int32 fast path"
+    codes, draw = lorenzo_encode(x, eb=eb, interpret=_interpret_default())
+    xhat = lorenzo_decode(draw, eb=eb, interpret=_interpret_default())
+    err = float(jnp.max(jnp.abs(xhat - x)))
+    return {"max_err": err, "codes": np.asarray(codes), "draw": np.asarray(draw)}
+
+
+def ref_encode(x, eb, radius=32768, mode="2d"):
+    fn = _ref.encode_1d if mode == "1d" else _ref.encode_2d
+    return fn(jnp.asarray(x, jnp.float32), eb, radius)
+
+
+def ref_decode(d, eb, mode="2d"):
+    fn = _ref.decode_1d if mode == "1d" else _ref.decode_2d
+    return fn(jnp.asarray(d, jnp.int32), eb)

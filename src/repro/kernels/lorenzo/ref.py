@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused prequantize+Lorenzo kernels.
+
+Semantics contract shared with kernel.py / ops.py:
+
+  encode: q = rint(x / (2*eb)) as int32
+          1-D rows mode : d[r, c] = q[r, c] - q[r, c-1]           (q[., -1] = 0)
+          2-D mode      : d = diff_rows(diff_cols(q))             (zero-padded)
+          codes = d + radius where |d| < radius else 0  (int32)
+          draw  = d                                     (int32, raw diffs)
+
+  decode: inverse cumulative sums, xhat = q * 2*eb (f32)
+
+The int32 fast path requires |x|/(2*eb) < 2^30; ops.py enforces/falls back.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prequant(x: jnp.ndarray, eb: float) -> jnp.ndarray:
+    # multiply by the reciprocal — bit-identical to the kernel (which avoids
+    # the slower VPU divide); the contract is reciprocal-multiply semantics.
+    inv = 1.0 / (2.0 * eb)
+    return jnp.rint(x.astype(jnp.float32) * inv).astype(jnp.int32)
+
+
+def encode_1d(x: jnp.ndarray, eb: float, radius: int):
+    """Row-independent 1-D Lorenzo; a (1, N) input is a global 1-D series."""
+    q = prequant(x, eb)
+    left = jnp.pad(q[:, :-1], ((0, 0), (1, 0)))
+    d = q - left
+    codes = jnp.where(jnp.abs(d) < radius, d + radius, 0).astype(jnp.int32)
+    return codes, d
+
+
+def encode_2d(x: jnp.ndarray, eb: float, radius: int):
+    q = prequant(x, eb)
+    up = jnp.pad(q[:-1, :], ((1, 0), (0, 0)))
+    dr = q - up
+    left = jnp.pad(dr[:, :-1], ((0, 0), (1, 0)))
+    d = dr - left
+    codes = jnp.where(jnp.abs(d) < radius, d + radius, 0).astype(jnp.int32)
+    return codes, d
+
+
+def decode_1d(d: jnp.ndarray, eb: float) -> jnp.ndarray:
+    q = jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    return q.astype(jnp.float32) * (2.0 * eb)
+
+
+def decode_2d(d: jnp.ndarray, eb: float) -> jnp.ndarray:
+    q = jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    q = jnp.cumsum(q, axis=0, dtype=jnp.int32)
+    return q.astype(jnp.float32) * (2.0 * eb)

@@ -1,0 +1,81 @@
+"""Per-(arch x shape) parallelism policy — one source of truth for the
+dry-run, the roofline harness and the examples.
+
+Defaults are the BASELINE recorded in EXPERIMENTS.md §Roofline; §Perf
+hillclimb variants override via ``overrides``.  Notable policy decisions:
+
+  * train: FSDP over ``data`` (HSDP across pods: replicas over ``pod``),
+    full remat, per-arch gradient-accumulation microbatches sized so stored
+    scan carries fit HBM; nemotron additionally shards the residual stream's
+    sequence dim over ``model`` (Megatron-style SP) and compresses optimizer
+    moments to int8 (the paper's quantizer — without it m/v alone exceed v5e
+    HBM; see EXPERIMENTS.md).
+  * decode: weights stay FSDP-sharded (gather streams through the layer
+    scan); nemotron's decode_32k KV cache only fits in int8 (the paper's
+    technique as a *capacity enabler*, not just a bandwidth one).
+  * long_500k: batch=1 cannot shard over DP axes -> batch replicated, TP
+    only; the cache is window/state-sized (SWA / SSM) so this is cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+from ..models.common import ModelConfig
+from ..optim import AdamWConfig
+from ..parallel.plan import ParallelPlan
+
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "nemotron-4-340b": 16,
+    "granite-3-8b": 8,
+    "pixtral-12b": 8,
+    "zamba2-7b": 8,
+    "deepseek-moe-16b": 8,
+    "qwen3-moe-30b-a3b": 8,
+    "mamba2-2.7b": 4,
+    "h2o-danube-1.8b": 4,
+    "qwen1.5-0.5b": 2,
+    "whisper-small": 2,
+}
+
+SEQ_SHARD_TRAIN = {"nemotron-4-340b"}
+COMPRESS_MOMENTS = {"nemotron-4-340b"}
+KV_INT8_DECODE = {"nemotron-4-340b"}
+
+
+def make_cell_plan(
+    arch: str,
+    cfg: ModelConfig,
+    cell,
+    mesh,
+    multi_pod: bool,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Tuple[ParallelPlan, AdamWConfig]:
+    overrides = dict(overrides or {})
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    batch_axes = dp_axes if cell.batch % dp == 0 else ()
+
+    opt = AdamWConfig(compress_moments=arch in COMPRESS_MOMENTS)
+    if "compress_moments" in overrides:
+        opt = opt._replace(compress_moments=overrides.pop("compress_moments"))
+
+    kw: Dict[str, Any] = dict(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        model_axis="model",
+        fsdp_axes=("data",),
+        remat="full",
+        microbatches=1,
+        kv_cache_dtype="bf16",
+    )
+    if cell.kind == "train":
+        kw["microbatches"] = TRAIN_MICROBATCHES.get(arch, 4)
+        if arch in SEQ_SHARD_TRAIN:
+            kw["seq_axes"] = ("model",)
+    elif cell.kind == "decode":
+        if arch in KV_INT8_DECODE:
+            kw["kv_cache_dtype"] = "int8"
+    kw.update(overrides)
+    return ParallelPlan(**kw), opt

@@ -1,0 +1,61 @@
+"""Model zoo facade: family dispatch for init / loss / prefill / decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+from ..parallel.plan import ParallelPlan
+from . import encdec as _encdec
+from . import lm as _lm
+from .common import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig, plan: ParallelPlan):
+    if cfg.family == "encdec":
+        return _encdec.init_encdec(key, cfg, plan)
+    return _lm.init_lm(key, cfg, plan)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, plan: ParallelPlan, attn_mode="blocked"):
+    if cfg.family == "encdec":
+        return _encdec.encdec_loss(params, batch, cfg, plan, attn_mode)
+    return _lm.lm_loss(params, batch, cfg, plan, attn_mode)
+
+
+def prefill_logits(params, batch, cfg: ModelConfig, plan: ParallelPlan, attn_mode="blocked"):
+    """Inference prefill: forward to final hidden + last-position logits."""
+    if cfg.family == "encdec":
+        enc_out = _encdec.encode(params, batch["enc_frames"], cfg, plan)
+        hidden = _encdec.decode_train(params, batch["tokens"], enc_out, cfg, plan, attn_mode)
+    else:
+        if "embeds" in batch:
+            x = plan.act_btd(batch["embeds"].astype(cfg.param_dtype))
+        else:
+            x = _lm.embed_tokens(params, batch["tokens"], cfg, plan)
+        hidden, _ = _lm.lm_backbone(params, x, cfg, plan, attn_mode)
+    w = _lm.unembed_matrix(params, cfg)
+    logits = (hidden[:, -1:, :] @ w).astype(jnp.float32)
+    return logits[:, 0, : cfg.vocab]
+
+
+def init_cache(params, cfg: ModelConfig, plan: ParallelPlan, batch: int, max_len: int, enc_frames=None):
+    if cfg.family == "encdec":
+        return _encdec.init_encdec_cache(params, enc_frames, cfg, plan, batch, max_len)
+    return _lm.init_decode_cache(cfg, plan, batch, max_len)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, plan: ParallelPlan):
+    if cfg.family == "encdec":
+        return _encdec.encdec_decode_step(params, cache, tokens, cfg, plan)
+    return _lm.lm_decode_step(params, cache, tokens, cfg, plan)
+
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "loss_fn",
+    "prefill_logits",
+    "init_cache",
+    "decode_step",
+]

@@ -1,0 +1,315 @@
+"""Shared transformer layers: norms, RoPE, chunked GQA attention, MLPs.
+
+Attention is memory-efficient (flash-style online softmax over KV chunks) in
+pure JAX so every (arch x shape) cell lowers on any backend:
+
+  * mode "scan"    — one lax.scan over KV chunks; compact HLO (O(1) in S).
+  * mode "blocked" — python loop over Q chunks, each attending only the KV
+    chunks its causal/SWA mask allows; skips fully-masked chunk pairs (the
+    §Perf compute-term optimization; ~2x FLOPs saving for causal).
+
+GQA with n_kv < TP is handled by *virtual KV-head duplication* (kv_repeat):
+mathematically identical, makes the kv-head axis shard evenly (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.plan import ParallelPlan
+from .common import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    s = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, with_bias: bool = None):
+    d = cfg.d_model
+    if (with_bias is None and cfg.norm == "layernorm") or with_bias:
+        return {"w": jnp.ones((d,), cfg.param_dtype), "b": jnp.zeros((d,), cfg.param_dtype)}
+    return {"w": jnp.ones((d,), cfg.param_dtype)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "b" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    rot = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_q: int  # query heads (global)
+    n_kv: int  # effective kv heads after duplication (global)
+    hd: int
+
+    @property
+    def group(self) -> int:
+        return self.n_q // self.n_kv
+
+
+def attn_dims(cfg: ModelConfig, plan: ParallelPlan) -> AttnDims:
+    rep = plan.kv_repeat(cfg.n_kv_heads, cfg.n_heads)
+    return AttnDims(n_q=cfg.n_heads, n_kv=cfg.n_kv_heads * rep, hd=cfg.hd)
+
+
+def init_attention(key, cfg: ModelConfig, plan: ParallelPlan):
+    dims = attn_dims(cfg, plan)
+    d, hd = cfg.d_model, dims.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, dims.n_q * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, dims.n_kv * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, dims.n_kv * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (dims.n_q * hd, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_q * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((dims.n_kv * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((dims.n_kv * hd,), cfg.param_dtype)
+    return p
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: Optional[int], kv_len=None):
+    """(Sq, Sk) additive mask for one chunk pair from absolute positions."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window is not None:
+        m = jnp.where(q_pos[:, None] - k_pos[None, :] >= window, NEG_INF, m)
+    if kv_len is not None:
+        m = jnp.where(k_pos[None, :] >= kv_len, NEG_INF, m)
+    return m
+
+
+def _attend_chunk(q, k, v, mask, state):
+    """Online-softmax update.  q:(B,Sq,KV,G,hd) k/v:(B,Sk,KV,hd)."""
+    m_prev, l_prev, acc = state
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s + mask[None, None, None, :, :]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(-1)
+    pv = jnp.einsum("bkgqs,bskh->bkgqh", p, v.astype(jnp.float32))
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def attention_core(
+    q: jnp.ndarray,  # (B, Sq, Hq, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset=0,  # absolute position of q[0] (decode: kv_len-Sq)
+    kv_len=None,  # valid prefix of k/v (decode with padded cache)
+    chunk_k: int = 1024,
+    mode: str = "blocked",
+    k_scale: Optional[jnp.ndarray] = None,  # (B, Sk, KV) int8-dequant scales
+    v_scale: Optional[jnp.ndarray] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    B, Sq, Hq, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = Hq // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    nck = max(1, math.ceil(Sk / chunk_k))
+    ck = Sk // nck if Sk % nck == 0 else chunk_k
+    # pad Sk to chunk multiple (mask handles the tail via kv_len)
+    pad = (-Sk) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        if kv_len is None:
+            kv_len = Sk
+    nck = k.shape[1] // ck
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def dequant(kc, sc):
+        if sc is None:
+            return kc
+        return kc.astype(jnp.float32) * sc[..., None]
+
+    def kv_chunk(i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * ck, ck, axis=1)
+        kc = dequant(sl(k), sl(k_scale) if k_scale is not None else None)
+        vc = dequant(sl(v), sl(v_scale) if v_scale is not None else None)
+        return kc.astype(jnp.float32), vc.astype(jnp.float32)
+
+    init = (
+        jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, Sq), jnp.float32),
+        jnp.zeros((B, KV, G, Sq, hd), jnp.float32),
+    )
+
+    out_dtype = out_dtype or jnp.float32
+
+    def finalize(m, l, acc, sq):
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, sq, Hq, hd).astype(out_dtype)
+
+    if mode == "scan" or Sq == 1 or nck == 1:
+        def body(state, i):
+            kc, vc = kv_chunk(i)
+            k_pos = i * ck + jnp.arange(ck)
+            mask = _chunk_mask(q_pos, k_pos, causal, window, kv_len)
+            return _attend_chunk(qg, kc, vc, mask, state), None
+
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nck))
+        return finalize(m, l, acc, Sq)
+
+    # blocked: per Q chunk, visit only the KV chunks its mask allows; each
+    # chunk is normalized + cast immediately so the f32 accumulator never
+    # exceeds one (B, KV, G, cq, hd) tile.
+    cq = min(Sq, 1024)
+    assert Sq % cq == 0, "blocked mode needs Sq % chunk == 0"
+    outs = []
+    for qi in range(Sq // cq):
+        qc = qg[:, qi * cq : (qi + 1) * cq]
+        qp = q_pos[qi * cq : (qi + 1) * cq]
+        lo_pos = 0 if window is None else max(0, (qi * cq) - window - ck + 1)
+        lo = lo_pos // ck
+        hi = nck if not causal else min(nck, ((qi + 1) * cq + ck - 1) // ck)
+        st = (
+            jnp.full((B, KV, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G, cq), jnp.float32),
+            jnp.zeros((B, KV, G, cq, hd), jnp.float32),
+        )
+
+        def body(state, i, qc=qc, qp=qp):
+            kc, vc = kv_chunk(i)
+            k_pos = i * ck + jnp.arange(ck)
+            mask = _chunk_mask(qp, k_pos, causal, window, kv_len)
+            return _attend_chunk(qc, kc, vc, mask, state), None
+
+        st, _ = jax.lax.scan(body, st, jnp.arange(lo, hi))
+        outs.append(finalize(*st, cq))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_block(
+    p,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    *,
+    positions=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_mode: str = "blocked",
+    kv_from: Optional[jnp.ndarray] = None,  # cross-attention source
+) -> jnp.ndarray:
+    B, S, d = x.shape
+    dims = attn_dims(cfg, plan)
+    src = x if kv_from is None else kv_from
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, dims.n_q, dims.hd)
+    k = k.reshape(B, src.shape[1], dims.n_kv, dims.hd)
+    v = v.reshape(B, src.shape[1], dims.n_kv, dims.hd)
+    q = plan.act_heads(q)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv_from is None:  # self-attention: rotary on q and k
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_core(
+        q, k, v, causal=causal, window=window, mode=attn_mode, out_dtype=x.dtype
+    )
+    out = out.reshape(B, S, dims.n_q * dims.hd)
+    from ..parallel.specs import heads_shardable
+
+    proj = plan.tp_project(out, p["wo"], shardable=heads_shardable(cfg, plan))
+    return plan.act_btd(proj)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w1": dense_init(ks[0], (d, f), cfg.param_dtype),
+            "w3": dense_init(ks[1], (d, f), cfg.param_dtype),
+            "w2": dense_init(ks[2], (f, d), cfg.param_dtype),
+        }
+    return {
+        "w1": dense_init(ks[0], (d, f), cfg.param_dtype),
+        "w2": dense_init(ks[2], (f, d), cfg.param_dtype),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig, plan: ParallelPlan):
+    h = x @ p["w1"]
+    h = plan.constrain(h, plan.ps(plan.b, None, plan.model_axis))
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h) * plan.constrain(
+            x @ p["w3"], plan.ps(plan.b, None, plan.model_axis)
+        )
+    elif cfg.mlp_act == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    return plan.act_btd(plan.tp_project(h.astype(x.dtype), p["w2"]))

@@ -1,0 +1,603 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+One implementation, configured per arch (repro/configs/*):
+  * scan-over-layers keeps HLO size O(1) in depth (96-layer Nemotron compiles
+    at 512 devices);
+  * remat policy wraps the scanned block;
+  * losses are computed with a seq-chunked fused logits+xent (the (B,S,V)
+    logits tensor never materializes — the memory-roofline lever for the
+    256k-vocab archs);
+  * serving uses a KV cache that is optionally int8-quantized per token+head
+    via the paper's linear-scaling quantizer (repro/compression/kvcache.py
+    holds the quantize/dequantize policy) — SSM layers carry their O(1) state
+    instead (attention-free archs: see DESIGN.md §6 arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.plan import ParallelPlan
+from .common import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    attention_block,
+    attention_core,
+    attn_dims,
+    dense_init,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+from .mamba2 import (
+    apply_mamba2,
+    init_mamba2,
+    init_ssm_state,
+    mamba2_decode_step,
+)
+from .moe import apply_moe, init_moe
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig, plan: ParallelPlan) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (Vp, d), cfg.param_dtype, scale=0.02),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (d, Vp), cfg.param_dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, plan, moe=False), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "moe":
+        pre = cfg.dense_prefix_layers
+        if pre:
+            params["dense_blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg, plan, moe=False), ks[2], pre
+            )
+        params["blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, plan, moe=True),
+            ks[3],
+            cfg.n_layers - pre,
+        )
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), ks[2], cfg.n_layers
+        )
+        params["shared_attn"] = _init_attn_block(ks[3], cfg, plan, moe=False)
+    else:
+        raise ValueError(f"init_lm does not handle family {cfg.family}")
+    return params
+
+
+def _init_attn_block(key, cfg, plan, *, moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(cfg),
+        "attn": init_attention(ks[0], cfg, plan),
+        "ln2": init_norm(cfg),
+    }
+    if moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_ssm_block(key, cfg):
+    return {"ln": init_norm(cfg), "ssm": init_mamba2(key, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# blocks (train)
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, x, cfg, plan, attn_mode, moe: bool):
+    x = plan.grad_barrier(x)
+    h = apply_norm(p["ln1"], x)
+    x = x + attention_block(
+        p["attn"],
+        h,
+        cfg,
+        plan,
+        causal=True,
+        window=cfg.sliding_window,
+        attn_mode=attn_mode,
+    )
+    h = apply_norm(p["ln2"], x)
+    if moe:
+        y, aux = apply_moe(p["moe"], h, cfg, plan)
+        return x + y, aux
+    return x + apply_mlp(p["mlp"], h, cfg, plan), jnp.float32(0.0)
+
+
+def _ssm_block(p, x, cfg, plan):
+    x = plan.grad_barrier(x)
+    h = apply_norm(p["ln"], x)
+    return x + apply_mamba2(p["ssm"], h, cfg, plan), jnp.float32(0.0)
+
+
+def _maybe_remat(fn, plan: ParallelPlan):
+    if plan.remat == "none":
+        return fn
+    if plan.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(x, stacked, block_fn, plan):
+    fn = _maybe_remat(block_fn, plan)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, aux_i = fn(lp, x)
+        return (x, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def lm_backbone(
+    params,
+    x: jnp.ndarray,  # (B, S, d) embedded inputs
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    attn_mode: str = "blocked",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the layer stack; returns (hidden, aux_loss)."""
+    aux_total = jnp.float32(0.0)
+    if cfg.family in ("dense", "vlm"):
+        x, aux = _scan_blocks(
+            x,
+            params["blocks"],
+            lambda p, h: _attn_block(p, h, cfg, plan, attn_mode, moe=False),
+            plan,
+        )
+        aux_total += aux
+    elif cfg.family == "moe":
+        if cfg.dense_prefix_layers:
+            x, aux = _scan_blocks(
+                x,
+                params["dense_blocks"],
+                lambda p, h: _attn_block(p, h, cfg, plan, attn_mode, moe=False),
+                plan,
+            )
+            aux_total += aux
+        x, aux = _scan_blocks(
+            x,
+            params["blocks"],
+            lambda p, h: _attn_block(p, h, cfg, plan, attn_mode, moe=True),
+            plan,
+        )
+        aux_total += aux
+    elif cfg.family == "ssm":
+        x, aux = _scan_blocks(
+            x, params["blocks"], lambda p, h: _ssm_block(p, h, cfg, plan), plan
+        )
+        aux_total += aux
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or 6
+        L = cfg.n_layers
+        n_groups, rem = L // k, L % k
+        stacked = params["blocks"]
+        shared = params["shared_attn"]
+        group_leaves = jax.tree.map(
+            lambda t: t[: n_groups * k].reshape((n_groups, k) + t.shape[1:]), stacked
+        )
+        shared_fn = _maybe_remat(
+            lambda p, h: _attn_block(p, h, cfg, plan, attn_mode, moe=False), plan
+        )
+
+        def group_body(carry, gp):
+            h, aux = carry
+            h, aux_i = _scan_blocks(
+                h, gp, lambda p, hh: _ssm_block(p, hh, cfg, plan), plan
+            )
+            h, _ = shared_fn(shared, h)
+            return (h, aux + aux_i), None
+
+        (x, aux), _ = jax.lax.scan(group_body, (x, aux_total), group_leaves)
+        aux_total = aux
+        if rem:
+            tail = jax.tree.map(lambda t: t[n_groups * k :], stacked)
+            x, aux = _scan_blocks(
+                x, tail, lambda p, h: _ssm_block(p, h, cfg, plan), plan
+            )
+            aux_total += aux
+    else:
+        raise ValueError(cfg.family)
+    return apply_norm(params["final_norm"], x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding + loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig, plan: ParallelPlan):
+    x = params["embed"][tokens]
+    return plan.act_btd(x)
+
+
+def unembed_matrix(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_xent(
+    hidden: jnp.ndarray,  # (B, S, d)
+    w_unembed: jnp.ndarray,  # (d, Vp)
+    labels: jnp.ndarray,  # (B, S) int32; < 0 = ignore
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Fused logits+softmax-xent over sequence chunks; (B,S,V) never lives."""
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nck = S // c
+
+    def body(carry, i):
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = (h @ w_unembed).astype(jnp.float32)
+        logits = plan.constrain(
+            logits, plan.ps(plan.b, None, plan.model_axis)
+        )
+        mask = (y >= 0) & (y < cfg.vocab)
+        ysafe = jnp.where(mask, y, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ysafe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), jnp.arange(nck)
+    )
+    return tot / jnp.maximum(cnt, 1)
+
+
+def lm_loss(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    attn_mode: str = "blocked",
+    aux_coeff: float = 0.01,
+) -> jnp.ndarray:
+    if "embeds" in batch:  # vlm / stubbed-frontend path
+        x = plan.act_btd(batch["embeds"].astype(cfg.param_dtype))
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg, plan)
+    hidden, aux = lm_backbone(params, x, cfg, plan, attn_mode)
+    loss = chunked_xent(
+        hidden, unembed_matrix(params, cfg), batch["labels"], cfg, plan
+    )
+    return loss + aux_coeff * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: KV cache + decode step
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeCache:
+    """Per-layer-stacked decode state.
+
+    Attention layers: k/v (L, B, W, KV, hd) (+ per-token scales if int8),
+    pos (B, W) absolute position per ring slot.  SSM layers: (ssm, conv)
+    states.  ``length`` counts tokens already absorbed."""
+
+    k: Optional[jnp.ndarray] = None
+    v: Optional[jnp.ndarray] = None
+    k_scale: Optional[jnp.ndarray] = None
+    v_scale: Optional[jnp.ndarray] = None
+    pos: Optional[jnp.ndarray] = None
+    ssm: Optional[Any] = None
+    conv: Optional[Any] = None
+    length: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32)
+    )
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // (cfg.hybrid_attn_every or 6)
+    return 0
+
+
+def _n_ssm_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers if cfg.family in ("ssm", "hybrid") else 0
+
+
+def cache_window(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_decode_cache(
+    cfg: ModelConfig, plan: ParallelPlan, batch: int, max_len: int
+) -> DecodeCache:
+    La, Ls = _n_attn_layers(cfg), _n_ssm_layers(cfg)
+    W = cache_window(cfg, max_len)
+    dims = attn_dims(cfg, plan)
+    kv_dtype = jnp.int8 if plan.kv_cache_dtype == "int8" else cfg.param_dtype
+    c = DecodeCache()
+    if La:
+        shp = (La, batch, W, dims.n_kv, dims.hd)
+        c.k = jnp.zeros(shp, kv_dtype)
+        c.v = jnp.zeros(shp, kv_dtype)
+        if plan.kv_cache_dtype == "int8":
+            c.k_scale = jnp.zeros((La, batch, W, dims.n_kv), jnp.float32)
+            c.v_scale = jnp.zeros((La, batch, W, dims.n_kv), jnp.float32)
+        c.pos = jnp.full((batch, W), -1, jnp.int32)
+    if Ls:
+        ssm0, conv0 = init_ssm_state(cfg, batch)
+        c.ssm = jnp.zeros((Ls,) + ssm0.shape, ssm0.dtype)
+        c.conv = jnp.zeros((Ls,) + conv0.shape, conv0.dtype)
+    return c
+
+
+def _quantize_token(x):
+    """Per-token-per-head int8 (paper's linear-scaling quantizer, radius 127).
+
+    x: (B, 1, KV, hd) -> (codes int8, scale (B, 1, KV))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _decode_attn(
+    p,
+    x,  # (B, 1, d)
+    layer_cache,
+    length,
+    pos_slot,
+    cfg,
+    plan,
+):
+    """Single-token attention against the (possibly int8) ring cache."""
+    B = x.shape[0]
+    dims = attn_dims(cfg, plan)
+    k_c, v_c, ks_c, vs_c, pos_c = layer_cache
+    W = k_c.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, dims.n_q, dims.hd)
+    k = (x @ p["wk"]).reshape(B, 1, dims.n_kv, dims.hd)
+    v = (x @ p["wv"]).reshape(B, 1, dims.n_kv, dims.hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, dims.n_q, dims.hd)
+        k = k + p["bk"].reshape(1, 1, dims.n_kv, dims.hd)
+        v = v + p["bv"].reshape(1, 1, dims.n_kv, dims.hd)
+    posv = length.reshape(1, 1)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = pos_slot  # length % W
+    if plan.kv_cache_dtype == "int8":
+        kq, ks = _quantize_token(k)
+        vq, vs = _quantize_token(v)
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, kq, slot, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, vq, slot, axis=1)
+        ks_c = jax.lax.dynamic_update_slice_in_dim(ks_c, ks, slot, axis=1)
+        vs_c = jax.lax.dynamic_update_slice_in_dim(vs_c, vs, slot, axis=1)
+        # dequantize to bf16, accumulate in f32 (the Pallas kvquant kernel
+        # does this in VMEM on TPU): int8 x bf16-scale products carry the
+        # full 8 quantized bits; halves the dequant HBM traffic vs f32
+        kf = k_c.astype(jnp.bfloat16) * ks_c[..., None].astype(jnp.bfloat16)
+        vf = v_c.astype(jnp.bfloat16) * vs_c[..., None].astype(jnp.bfloat16)
+    else:
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k.astype(k_c.dtype), slot, axis=1
+        )
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v.astype(v_c.dtype), slot, axis=1
+        )
+        kf, vf = k_c, v_c
+    # mask: valid slots only (pos >= 0 and within window of current pos)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        pos_c, jnp.broadcast_to(length[None, None], (B, 1)).astype(jnp.int32), slot, axis=1
+    )
+    valid = new_pos >= 0
+    if cfg.sliding_window:
+        valid &= (length - new_pos) < cfg.sliding_window
+    G = dims.group
+    qg = (
+        q.reshape(B, dims.n_kv, G, dims.hd).astype(jnp.float32)
+        / jnp.sqrt(jnp.float32(dims.hd))
+    ).astype(kf.dtype)
+    s = jnp.einsum(
+        "bkgh,bwkh->bkgw", qg, kf, preferred_element_type=jnp.float32
+    )
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgw,bwkh->bkgh",
+        w.astype(kf.dtype),
+        vf,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(B, 1, dims.n_q * dims.hd).astype(x.dtype)
+    out = o @ p["wo"]
+    return out, (k_c, v_c, ks_c, vs_c, new_pos)
+
+
+def lm_decode_step(
+    params,
+    cache: DecodeCache,
+    tokens: jnp.ndarray,  # (B, 1) int32
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+) -> Tuple[jnp.ndarray, DecodeCache]:
+    """One serve step: consume one token per sequence, emit next-token logits."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg, plan)
+    length = cache.length
+    W = cache.k.shape[2] if cache.k is not None else 0
+    slot = (length % W).astype(jnp.int32) if W else jnp.int32(0)
+
+    def attn_layer(carry, inp):
+        h = carry
+        lp, lc = inp
+        hn = apply_norm(lp["ln1"], h)
+        o, lc_new = _decode_attn(lp["attn"], hn, lc, length, slot, cfg, plan)
+        h = h + o
+        hn = apply_norm(lp["ln2"], h)
+        if "moe" in lp:
+            y, _ = apply_moe(lp["moe"], hn, cfg, plan)
+            h = h + y
+        else:
+            h = h + apply_mlp(lp["mlp"], hn, cfg, plan)
+        return h, lc_new
+
+    def ssm_layer(carry, inp):
+        h = carry
+        lp, st = inp
+        hn = apply_norm(lp["ln"], h)
+        o, st_new = mamba2_decode_step(lp["ssm"], hn, st, cfg, plan)
+        return h + o, st_new
+
+    new = DecodeCache(length=length + 1)
+    if cfg.family in ("dense", "vlm", "moe"):
+        # unified: scan over the stacked attn layers with their cache slices
+        def run_stack(x, blocks, k, v, ks, vs):
+            dummy = jnp.zeros((k.shape[0],), jnp.float32)
+            ks_in = ks if ks is not None else dummy
+            vs_in = vs if vs is not None else dummy
+
+            def body2(h, inp):
+                lp, kk, vv, kss, vss = inp
+                sc = (kss, vss) if ks is not None else (None, None)
+                h, (k2, v2, ks2, vs2, _) = attn_layer(
+                    h, (lp, (kk, vv, sc[0], sc[1], cache.pos))
+                )
+                return h, (k2, v2, ks2 if ks is not None else kss, vs2 if vs is not None else vss)
+
+            h, (k2, v2, ks2, vs2) = jax.lax.scan(
+                body2, x, (blocks, k, v, ks_in, vs_in)
+            )
+            return h, k2, v2, (ks2 if ks is not None else None), (vs2 if vs is not None else None)
+
+        pre = cfg.dense_prefix_layers if cfg.family == "moe" else 0
+        h = x
+        if pre:
+            h, k2a, v2a, ks2a, vs2a = run_stack(
+                h,
+                params["dense_blocks"],
+                cache.k[:pre],
+                cache.v[:pre],
+                cache.k_scale[:pre] if cache.k_scale is not None else None,
+                cache.v_scale[:pre] if cache.v_scale is not None else None,
+            )
+        h, k2, v2, ks2, vs2 = run_stack(
+            h,
+            params["blocks"],
+            cache.k[pre:],
+            cache.v[pre:],
+            cache.k_scale[pre:] if cache.k_scale is not None else None,
+            cache.v_scale[pre:] if cache.v_scale is not None else None,
+        )
+        if pre:
+            k2 = jnp.concatenate([k2a, k2], axis=0)
+            v2 = jnp.concatenate([v2a, v2], axis=0)
+            if ks2 is not None:
+                ks2 = jnp.concatenate([ks2a, ks2], axis=0)
+                vs2 = jnp.concatenate([vs2a, vs2], axis=0)
+        new.k, new.v, new.k_scale, new.v_scale = k2, v2, ks2, vs2
+        new.pos = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos,
+            jnp.broadcast_to(length[None, None], (B, 1)).astype(jnp.int32),
+            slot,
+            axis=1,
+        )
+    elif cfg.family == "ssm":
+        h, (ssm2, conv2) = jax.lax.scan(
+            lambda hh, inp: ssm_layer(hh, inp),
+            x,
+            (params["blocks"], (cache.ssm, cache.conv)),
+        )
+        new.ssm, new.conv = ssm2, conv2
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or 6
+        L = cfg.n_layers
+        n_groups, rem = L // k, L % k
+        shared = params["shared_attn"]
+        h = x
+        ssm_states, conv_states = [], []
+        ks_list, vs_list = [], []
+        k_list, v_list = [], []
+        for g in range(n_groups):
+            blocks_g = jax.tree.map(
+                lambda t: t[g * k : (g + 1) * k], params["blocks"]
+            )
+            h, (ssm2, conv2) = jax.lax.scan(
+                lambda hh, inp: ssm_layer(hh, inp),
+                h,
+                (blocks_g, (cache.ssm[g * k : (g + 1) * k], cache.conv[g * k : (g + 1) * k])),
+            )
+            ssm_states.append(ssm2)
+            conv_states.append(conv2)
+            lc = (
+                cache.k[g],
+                cache.v[g],
+                cache.k_scale[g] if cache.k_scale is not None else None,
+                cache.v_scale[g] if cache.v_scale is not None else None,
+                cache.pos,
+            )
+            hn = apply_norm(shared["ln1"], h)
+            o, lc2 = _decode_attn(shared["attn"], hn, lc, length, slot, cfg, plan)
+            h = h + o
+            hn = apply_norm(shared["ln2"], h)
+            h = h + apply_mlp(shared["mlp"], hn, cfg, plan)
+            k_list.append(lc2[0])
+            v_list.append(lc2[1])
+            if cache.k_scale is not None:
+                ks_list.append(lc2[2])
+                vs_list.append(lc2[3])
+            new.pos = lc2[4]
+        if rem:
+            tail = jax.tree.map(lambda t: t[n_groups * k :], params["blocks"])
+            h, (ssm2, conv2) = jax.lax.scan(
+                lambda hh, inp: ssm_layer(hh, inp),
+                h,
+                (tail, (cache.ssm[n_groups * k :], cache.conv[n_groups * k :])),
+            )
+            ssm_states.append(ssm2)
+            conv_states.append(conv2)
+        new.ssm = jnp.concatenate(ssm_states, axis=0)
+        new.conv = jnp.concatenate(conv_states, axis=0)
+        new.k = jnp.stack(k_list, axis=0)
+        new.v = jnp.stack(v_list, axis=0)
+        if ks_list:
+            new.k_scale = jnp.stack(ks_list, axis=0)
+            new.v_scale = jnp.stack(vs_list, axis=0)
+    else:
+        raise ValueError(cfg.family)
+
+    h = apply_norm(params["final_norm"], h)
+    logits = (h @ unembed_matrix(params, cfg)).astype(jnp.float32)
+    logits = plan.constrain(logits, plan.ps(plan.b, None, plan.model_axis))
+    return logits[:, 0, : cfg.vocab], new

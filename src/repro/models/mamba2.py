@@ -1,0 +1,190 @@
+"""Mamba2 / SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks; within a chunk the dual
+(attention-like) quadratic form runs fully parallel, and a lax.scan carries
+the (H, P, N) state across chunks — compact HLO, O(T·L) memory instead of
+O(T^2).  The depthwise causal conv is expressed as k shifted adds (no conv
+HLO, keeps the roofline parser trivial).  Decode is the O(1) recurrence; its
+state is the entire "KV cache" of an SSM — which is why long_500k decode runs
+for SSM/hybrid archs while pure full-attention archs skip it (DESIGN.md §6).
+
+Tensor parallelism: heads (and the inner width) shard over the model axis;
+groups=1 keeps B/C replicated per rank (they are small).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.plan import ParallelPlan
+from .common import ModelConfig
+from .layers import apply_norm, dense_init
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    conv_dim = di + 2 * G * N
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (H,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (K, conv_dim), cfg.param_dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[3], (di, d), cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv as K shifted adds.  x: (B, T, C), w: (K, C).
+
+    state: (B, K-1, C) trailing context for decode; returns (y, new_state)."""
+    K = w.shape[0]
+    if state is not None:
+        x = jnp.concatenate([state, x], axis=1)
+    else:  # training: causal same-length (zero left pad)
+        x = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    T_out = x.shape[1] - (K - 1)
+    y = jnp.zeros((x.shape[0], T_out, x.shape[2]), jnp.float32)
+    for j in range(K):
+        y = y + x[:, j : j + T_out].astype(jnp.float32) * w[j].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    new_state = x[:, -(K - 1) :] if K > 1 else None
+    return y, new_state
+
+
+def _ssd_chunk_scan(xh, Bc, Cc, dt, A, chunk: int):
+    """Chunked SSD.  xh: (B,T,H,P); Bc/Cc: (B,T,G,N) with G=1 squeezed to
+    (B,T,N); dt: (B,T,H) (post-softplus); A: (H,) negative.
+    Returns y: (B,T,H,P) and final state (B,H,P,N)."""
+    Bsz, T, H, P = xh.shape
+    N = Bc.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, f"seq {T} % chunk {L} != 0"
+    nc = T // L
+
+    def to_chunks(t, extra):
+        return t.reshape((Bsz, nc, L) + extra)
+
+    xc = to_chunks(xh, (H, P)).astype(jnp.float32)
+    bc = to_chunks(Bc, (N,)).astype(jnp.float32)
+    cc = to_chunks(Cc, (N,)).astype(jnp.float32)
+    dtc = to_chunks(dt, (H,)).astype(jnp.float32)
+
+    lc = dtc * A[None, None, None, :]  # log decay per step, (B,nc,L,H)
+    cum = jnp.cumsum(lc, axis=2)  # inclusive cumsum
+
+    dt_chunks = dtc
+
+    def step(h_prev, inp):
+        xk, bk, ck, cumk, dtk = inp  # (B,L,H,P),(B,L,N),(B,L,N),(B,L,H),(B,L,H)
+        li = jnp.arange(L)
+        mask = (li[:, None] >= li[None, :])[None, :, :, None]
+        seg = cumk[:, :, None, :] - cumk[:, None, :, :]  # (B,L,L,H)
+        decay = jnp.where(mask, jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", ck, bk)  # (B,L,L)
+        w = scores[:, :, :, None] * decay * dtk[:, None, :, :]  # (B,L,L,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xk)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", ck, h_prev, jnp.exp(cumk)
+        )
+        # state update: decay to end of chunk
+        tail = jnp.exp(cumk[:, -1:, :] - cumk)  # (B,L,H)
+        s_new = jnp.einsum("bjn,bjhp,bjh->bhpn", bk, xk, tail * dtk)
+        h_new = h_prev * jnp.exp(cumk[:, -1])[:, :, None, None] + s_new
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        bc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+        dt_chunks.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, H, P)
+    return y, h_final
+
+
+def apply_mamba2(
+    p,
+    x: jnp.ndarray,  # (B, T, d)
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+) -> jnp.ndarray:
+    B, T, d = x.shape
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, T, H, P)
+    xh = plan.constrain(xh, plan.ps(plan.b, None, plan.model_axis, None))
+    assert G == 1, "groups>1 not needed for assigned archs"
+    y, _ = _ssd_chunk_scan(xh, Bc, Cc, dt, A, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm({"w": p["norm_w"]}, y.astype(x.dtype))
+    return plan.act_btd(y @ p["out_proj"])
+
+
+def mamba2_decode_step(
+    p,
+    x: jnp.ndarray,  # (B, 1, d)
+    state: Tuple[jnp.ndarray, jnp.ndarray],  # (ssm_state (B,H,P,N), conv (B,K-1,C))
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+):
+    B, _, d = x.shape
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h_prev, conv_state = state
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])  # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    bk = Bc.reshape(B, N).astype(jnp.float32)
+    ck = Cc.reshape(B, N).astype(jnp.float32)
+    h_new = h_prev * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", bk, xh, dt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", ck, h_new) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm({"w": p["norm_w"]}, y.astype(x.dtype))
+    return y @ p["out_proj"], (h_new, conv_state)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return (
+        jnp.zeros((batch, H, P, N), jnp.float32),
+        jnp.zeros((batch, K - 1, conv_dim), jnp.float32),
+    )

@@ -1,0 +1,180 @@
+"""Fine-grained MoE with shared experts (DeepSeekMoE / Qwen3-MoE style).
+
+Expert parallelism: routed-expert weights are sharded over the ``model`` mesh
+axis; tokens are replicated across that axis (they already are, post
+attention-TP), so each rank gathers the tokens routed to ITS experts, runs a
+batched expert FFN at static capacity, scatter-adds its partial outputs and
+psums over the model axis.  No all-to-all is needed under this layout — the
+combine ride-shares the same collective slot as the dense TP MLP's psum
+(DESIGN.md §5).  Implemented with shard_map so the gather/scatter indices are
+local (pjit would force global index semantics).
+
+Top-k routing with renormalized gates + the standard load-balance aux loss.
+Over-capacity tokens are dropped (capacity_factor, GShard-style); the drop
+rate is returned for monitoring.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.plan import ParallelPlan
+from .common import ModelConfig
+from .layers import dense_init
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, scale=0.02),
+        "w1": dense_init(ks[1], (E, d, f), cfg.param_dtype),
+        "w3": dense_init(ks[2], (E, d, f), cfg.param_dtype),
+        "w2": dense_init(ks[3], (E, f, d), cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": dense_init(kk[0], (d, fs), cfg.param_dtype),
+            "w3": dense_init(kk[1], (d, fs), cfg.param_dtype),
+            "w2": dense_init(kk[2], (fs, d), cfg.param_dtype),
+        }
+    return p
+
+
+def _expert_ffn(w1, w3, w2, x):
+    """Batched per-expert SwiGLU: x (E, C, d) -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", x, w1)
+    g = jnp.einsum("ecd,edf->ecf", x, w3)
+    h = jax.nn.silu(h) * g
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _moe_local(
+    x,  # (T, d) local tokens
+    router,
+    w1,
+    w3,
+    w2,  # local expert shards (E_loc, ...)
+    *,
+    top_k: int,
+    n_experts: int,
+    axis_name: Optional[str],
+):
+    T, d = x.shape
+    E_loc = w1.shape[0]
+    rank = jax.lax.axis_index(axis_name) if axis_name else 0
+    e0 = rank * E_loc
+
+    logits = x.astype(jnp.float32) @ router  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = jnp.zeros(n_experts).at[idx.reshape(-1)].add(1.0) / (T * top_k)
+    aux = n_experts * jnp.sum(me * ce)
+
+    C = max(1, math.ceil(CAPACITY_FACTOR * T * top_k / n_experts))
+    flat_e = idx.reshape(-1)  # (T*k,)
+    local = (flat_e >= e0) & (flat_e < e0 + E_loc)
+    key = jnp.where(local, flat_e - e0, E_loc)  # E_loc = discard bucket
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    starts = jnp.searchsorted(sorted_key, jnp.arange(E_loc + 1))
+    pos = jnp.arange(T * top_k) - starts[sorted_key]
+    keep = (sorted_key < E_loc) & (pos < C)
+    slot = jnp.where(keep, sorted_key * C + pos, E_loc * C)  # last = trash
+
+    token_row = jnp.full(E_loc * C + 1, T, jnp.int32)  # T = zero-pad row
+    token_row = token_row.at[slot].set((order // top_k).astype(jnp.int32))
+    gate_val = jnp.zeros(E_loc * C + 1, jnp.float32)
+    gate_val = gate_val.at[slot].set(gates.reshape(-1)[order])
+    token_row, gate_val = token_row[:-1], gate_val[:-1]
+
+    xp = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    gx = xp[token_row].reshape(E_loc, C, d)
+    ye = _expert_ffn(w1, w3, w2, gx).reshape(E_loc * C, d)
+    ye = ye * gate_val[:, None].astype(ye.dtype)
+
+    # combine in the model dtype so the EP psum runs at half width (bf16) —
+    # §Perf: the f32 combine was the dominant MoE collective
+    ye = ye.astype(x.dtype)
+    y = jnp.zeros((T + 1, d), x.dtype).at[token_row].add(ye)[:T]
+    if axis_name:
+        y = jax.lax.psum(y, axis_name)
+        aux = jax.lax.pmean(aux, axis_name)
+    dropped = 1.0 - (keep.sum() / (T * top_k))
+    return y.astype(x.dtype), aux, dropped
+
+
+def apply_moe(
+    p, x: jnp.ndarray, cfg: ModelConfig, plan: ParallelPlan
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    k, E = cfg.top_k, cfg.n_experts
+
+    if plan.mesh is not None and plan.model_axis in plan.mesh.shape:
+        # manual over (batch axes + model): dispatch indices and capacity are
+        # LOCAL per device.  Inside the dp-manual grad-compression region
+        # (train/step.py) plan.batch_axes is empty, so this nests cleanly —
+        # tokens arrive already dp-local and only 'model' goes manual here.
+        mspec = plan.model_axis
+        bspec = plan.b
+        manual = {mspec} | set(plan.batch_axes)
+        fn = partial(
+            _moe_local, top_k=k, n_experts=E, axis_name=plan.model_axis
+        )
+
+        def shard_fn(xl, router, w1, w3, w2):
+            T = xl.shape[0] * xl.shape[1]
+            y, aux, _ = fn(xl.reshape(T, d), router, w1, w3, w2)
+            if plan.batch_axes:
+                aux = jax.lax.pmean(aux, tuple(plan.batch_axes))
+            return y.reshape(xl.shape), aux
+
+        y, aux = jax.shard_map(
+            shard_fn,
+            mesh=plan.smap_mesh(),
+            axis_names=manual,
+            in_specs=(
+                jax.sharding.PartitionSpec(bspec, None, None),
+                jax.sharding.PartitionSpec(),  # router replicated
+                jax.sharding.PartitionSpec(mspec, None, None),
+                jax.sharding.PartitionSpec(mspec, None, None),
+                jax.sharding.PartitionSpec(mspec, None, None),
+            ),
+            out_specs=(
+                jax.sharding.PartitionSpec(bspec, None, None),
+                jax.sharding.PartitionSpec(),
+            ),
+            check_vma=False,
+        )(x, p["router"], p["w1"], p["w3"], p["w2"])
+    else:
+        y, aux, _ = _moe_local(
+            x.reshape(B * S, d),
+            p["router"],
+            p["w1"],
+            p["w3"],
+            p["w2"],
+            top_k=k,
+            n_experts=E,
+            axis_name=None,
+        )
+        y = y.reshape(B, S, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        h = x @ sh["w1"]
+        h = (jax.nn.silu(h) * (x @ sh["w3"])).astype(x.dtype)
+        y = y + h @ sh["w2"]
+    return y, aux

@@ -1,0 +1,12 @@
+"""LR schedules (warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10000, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / max(1, warmup))
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,3 @@
+from .plan import ParallelPlan, single_device_plan
+
+__all__ = ["ParallelPlan", "single_device_plan"]

@@ -1,0 +1,222 @@
+"""Parallelism plan: how one model instance maps onto a device mesh.
+
+Axes convention (DESIGN.md §5):
+  pod    — data-parallel replicas across pods (also the optional PP axis)
+  data   — data parallel + FSDP parameter sharding within a pod
+  model  — tensor parallel (heads / d_ff / vocab) and expert parallel
+
+The plan is threaded through model code; every sharding decision goes through
+``ps()`` / ``constrain()`` so a single-device run (mesh=None) is the same code
+path with constraints elided.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)  # batch dim sharding
+    model_axis: Optional[str] = "model"  # TP/EP axis
+    fsdp_axes: Tuple[str, ...] = ()  # ZeRO-3 param sharding axes
+    seq_axes: Tuple[str, ...] = ()  # sequence/context parallel axes
+    remat: str = "full"  # "none" | "full" | "dots"
+    microbatches: int = 1  # gradient-accumulation steps
+    kv_cache_dtype: str = "bf16"  # "bf16" | "int8" (paper-technique lever)
+    grad_compress_bits: int = 0  # 0 = off; 8/4 = error-bounded grad quant
+    # §Perf levers (default off = paper-faithful baseline):
+    bwd_cast_bf16: bool = False  # cast activation cotangents to bf16 at block
+    # boundaries -> backward TP all-reduces run at half width
+    grad_accum_dtype: str = "float32"  # bf16 halves the per-microbatch
+    # gradient reduce-scatter wire bytes (and the accumulator memory)
+    manual_tp_psum: bool = False  # replace partitioner-chosen TP reductions
+    # with explicit shard_map psums on bf16 values (XLA-CPU otherwise
+    # all-reduces the f32 pre-convert dot accumulator: 2x wire bytes)
+    decode_feature_shard: bool = False  # shard the feature dim over the fsdp
+    # axis at decode: matmuls partial-sum tiny activations instead of
+    # all-gathering the full weight shards every token (weight-stationary)
+
+    # -- mesh facts ----------------------------------------------------------
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None or name not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def dp(self) -> int:
+        return math.prod(self.axis_size(a) for a in self.batch_axes)
+
+    def kv_repeat(self, n_kv: int, n_q: int = None) -> int:
+        """Virtual KV-head duplication so kv-heads shard evenly over TP
+        (GQA -> wider GQA; mathematically identical, standard TP practice).
+        Only applied when the duplicated head count still divides the query
+        heads (whisper's 12 heads on TP=16 stay unduplicated + unsharded)."""
+        tp = self.tp
+        if tp <= 1 or n_kv % tp == 0:
+            return 1
+        rep = math.lcm(n_kv, tp) // n_kv
+        if n_q is not None and (n_q % (n_kv * rep) != 0 or n_q % tp != 0):
+            return 1
+        return rep
+
+    @property
+    def b(self):
+        """Batch-dim spec entry: tuple of axes, single axis, or None.
+
+        Empty batch_axes (inside a dp-manual shard_map region) => None so
+        constraints never mention manual axes."""
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    # -- spec builders -------------------------------------------------------
+    def ps(self, *axes) -> PartitionSpec:
+        """Build a PartitionSpec; each arg is a mesh-axis name, a tuple of
+        names, or None."""
+        if self.mesh is None:
+            return PartitionSpec()
+        return PartitionSpec(*axes)
+
+    def batch_spec(self, *rest) -> PartitionSpec:
+        return self.ps(self.b, *rest)
+
+    def sharding(self, spec: PartitionSpec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: PartitionSpec):
+        if self.mesh is None:
+            return x
+        # inside a (partially-)manual shard_map region the constraint must be
+        # built against the ambient abstract mesh, not the concrete one
+        mesh = self.smap_mesh()
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    # -- common activation constraints ----------------------------------------
+    def act_btd(self, x):
+        """(batch, seq, d_model): batch over DP axes, seq optionally SP,
+        features over the fsdp axis in weight-stationary decode mode."""
+        s = (
+            (self.seq_axes if len(self.seq_axes) > 1 else self.seq_axes[0])
+            if self.seq_axes
+            else None
+        )
+        if self.decode_feature_shard and self.fsdp_axes:
+            # weight-stationary decode: the residual stream shards its
+            # FEATURE dim over the fsdp axis (batch left unsharded here —
+            # it is tiny; caches keep batch sharding) so contractions
+            # partial-sum activations instead of gathering weight shards.
+            f = self.fsdp_axes if len(self.fsdp_axes) > 1 else self.fsdp_axes[0]
+            x = self.constrain(x, self.ps(None, s, f))
+        else:
+            x = self.constrain(x, self.ps(self.b, s, None))
+        if self.bwd_cast_bf16:
+            x = _bf16_grad_barrier(x)
+        return x
+
+    def grad_barrier(self, x):
+        """Cast the cotangent flowing backward through this point to bf16.
+
+        Placed at layer-block ENTRY so the backward layer scan carries a
+        bf16 residual cotangent — every per-layer TP collective in the
+        backward pass then runs at half width (§Perf hypothesis P3)."""
+        if self.bwd_cast_bf16:
+            return _bf16_grad_barrier(x)
+        return x
+
+    def smap_mesh(self):
+        """Mesh for nested shard_map: the ambient (possibly partially-manual)
+        abstract mesh when inside another manual region, else the plan's."""
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not getattr(am, "empty", True):
+            return am
+        return self.mesh
+
+    def tp_project(self, h, w, shardable: bool = True):
+        """Output projection h @ w with an EXPLICIT bf16 TP psum.
+
+        h: (..., F) with F sharded over model; w: (F, D) rows sharded over
+        model.  The local dot's result is cast to h.dtype BEFORE the psum so
+        the reduction wire width is the model dtype — the auto partitioner
+        (XLA-CPU especially) otherwise reduces the f32 dot accumulator."""
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        if (
+            not self.manual_tp_psum
+            or self.mesh is None
+            or self.tp == 1
+            or not shardable
+        ):
+            return h @ w
+        m = self.model_axis
+        nd = h.ndim
+        # manual over ALL dp axes too (partial-manual shard_map under
+        # remat+scan trips an XLA-CPU partitioner bug — same workaround as
+        # the MoE dispatch); w is all-gathered over fsdp at region entry,
+        # which IS the usual FSDP gather.
+        manual = {m} | set(self.batch_axes) | set(self.fsdp_axes)
+
+        def f(hl, wl):
+            y = hl @ wl
+            return jax.lax.psum(y.astype(hl.dtype), m)
+
+        in_h = P(*((self.b,) + (None,) * (nd - 2) + (m,)))
+        out = P(*((self.b,) + (None,) * (nd - 1)))
+        return jax.shard_map(
+            f,
+            mesh=self.smap_mesh(),
+            axis_names=manual,
+            in_specs=(in_h, P(m, None)),
+            out_specs=out,
+            check_vma=False,
+        )(h, w)
+
+    def act_heads(self, x, shardable: bool = True):
+        """(batch, seq, heads, head_dim): heads over TP (when divisible)."""
+        m = self.model_axis if shardable else None
+        return self.constrain(x, self.ps(self.b, None, m, None))
+
+
+def single_device_plan(**kw) -> ParallelPlan:
+    return ParallelPlan(mesh=None, **kw)
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _barrier_for(dtype_name: str):
+    import jax.numpy as jnp
+
+    dt = jnp.dtype(dtype_name)
+
+    @jax.custom_vjp
+    def barrier(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, ct):
+        # round the cotangent through bf16: every collective in this
+        # activation-gradient's upstream path runs at half width
+        return (ct.astype(jnp.bfloat16).astype(dt),)
+
+    barrier.defvjp(fwd, bwd)
+    return barrier
+
+
+def _bf16_grad_barrier(x):
+    return _barrier_for(str(x.dtype))(x)

@@ -1,0 +1,115 @@
+"""Parameter PartitionSpec trees (TP over ``model``, FSDP over ``data``).
+
+Name-based dispatch over the param tree paths; stacked layer dims get leading
+``None``s automatically.  Head sharding is only applied when the (virtual)
+head counts divide the TP size — otherwise attention weights fall back to
+FSDP-only sharding (whisper's 12 heads on TP=16; the MLP/vocab dims still
+shard).  See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import ModelConfig
+from ..models.layers import attn_dims
+from .plan import ParallelPlan
+
+
+def heads_shardable(cfg: ModelConfig, plan: ParallelPlan) -> bool:
+    if cfg.n_heads == 0:
+        return True
+    dims = attn_dims(cfg, plan)
+    tp = plan.tp
+    return dims.n_q % tp == 0 and dims.n_kv % tp == 0
+
+
+def _fsdp(plan: ParallelPlan) -> Optional[Any]:
+    if not plan.fsdp_axes:
+        return None
+    return plan.fsdp_axes if len(plan.fsdp_axes) > 1 else plan.fsdp_axes[0]
+
+
+def param_specs(params, cfg: ModelConfig, plan: ParallelPlan):
+    """PartitionSpec pytree matching ``params``."""
+    if plan.mesh is None:
+        return jax.tree.map(lambda _: P(), params)
+    m = plan.model_axis
+    f = _fsdp(plan)
+    hs = heads_shardable(cfg, plan)
+
+    def spec(path, leaf) -> P:
+        names = [
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        ]
+        last = names[-1]
+        nd = leaf.ndim
+
+        def pad(*tail) -> P:
+            """Left-pad with Nones for stacked layer/group dims."""
+            lead = nd - len(tail)
+            return P(*((None,) * lead + tail))
+
+        if last in ("embed",):
+            return P(m, f)
+        if last in ("lm_head",):
+            return P(f, m)
+        if last in ("wq", "wk", "wv"):
+            return pad(f, m) if hs else pad(f, None)
+        if last in ("wo",):
+            return pad(m, f) if hs else pad(None, f)
+        if last in ("bq", "bk", "bv"):
+            return pad(m) if hs else pad(None)
+        if last in ("w1", "w3"):  # (d, f) or MoE (E, d, f)
+            if "moe" in names and "shared" not in names:
+                return pad(f, None) if nd == 3 else P(m, f, None)
+            return pad(f, m)
+        if last == "w2":  # (f, d) or MoE (E, f, d)
+            if "moe" in names and "shared" not in names:
+                return pad(None, f) if nd == 3 else P(m, None, f)
+            return pad(m, f)
+        if last == "router":
+            return pad(None, None)
+        if last == "in_proj":
+            return pad(f, m)
+        if last == "out_proj":
+            return pad(m, f)
+        if last == "conv_w":
+            return pad(None, m)
+        if last in ("conv_b", "norm_w"):
+            return pad(m)
+        if last in ("dt_bias", "A_log", "D"):
+            return pad(m)
+        # norms / scalars
+        return pad(*((None,) * min(nd, 1)))
+
+    def fix_moe_stacked(path, leaf):
+        """MoE expert tensors inside stacked blocks: (L, E, d, f)."""
+        names = [
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        ]
+        s = spec(path, leaf)
+        if "moe" in names and names[-1] in ("w1", "w3", "w2") and "shared" not in names:
+            if leaf.ndim == 4:  # (L, E, d, f)
+                if names[-1] == "w2":
+                    return P(None, m, None, f)
+                return P(None, m, f, None)
+            if leaf.ndim == 3:  # unstacked (E, d, f)
+                if names[-1] == "w2":
+                    return P(m, None, f)
+                return P(m, f, None)
+        return s
+
+    return jax.tree_util.tree_map_with_path(fix_moe_stacked, params)
+
+
+def batch_specs(batch_shapes, plan: ParallelPlan):
+    """Batch inputs: leading dim over the DP axes."""
+    b = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+
+    def spec(leaf):
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_shapes)

@@ -1,0 +1,80 @@
+"""Serve-step factory: jitted single-token decode with sharded (optionally
+int8-quantized) caches.
+
+Cache sharding: batch over the DP axes, kv-heads / ssm-heads over the model
+axis (when divisible), ring dimension unsharded.  Parameters use the same
+spec tree as training (incl. FSDP axes — per-layer gather streams inside the
+layer scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import models
+from ..models.common import ModelConfig
+from ..parallel.plan import ParallelPlan
+from ..parallel.specs import heads_shardable, param_specs
+
+
+def cache_specs(cache, cfg: ModelConfig, plan: ParallelPlan):
+    if plan.mesh is None:
+        return jax.tree.map(lambda _: P(), cache)
+    b = plan.b
+    m = plan.model_axis if heads_shardable(cfg, plan) else None
+    ms = plan.model_axis  # ssm dims use their own divisibility
+
+    def spec(path, leaf):
+        names = [
+            p.name if hasattr(p, "name") else getattr(p, "key", str(p))
+            for p in path
+        ]
+        last = names[-1]
+        nd = leaf.ndim
+        if last in ("k", "v", "cross_k", "cross_v"):
+            return P(None, b, None, m, None)
+        if last in ("k_scale", "v_scale"):
+            return P(None, b, None, m)
+        if last == "pos":
+            return P(b, None)
+        if last == "ssm":  # (L, B, H, P, N)
+            h = cfg.ssm_heads
+            return P(None, b, ms if h % plan.tp == 0 else None, None, None)
+        if last == "conv":  # (L, B, K-1, C)
+            c = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            return P(None, b, None, ms if c % plan.tp == 0 else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def make_serve_step(cfg: ModelConfig, plan: ParallelPlan):
+    def serve_step(params, cache, tokens):
+        return models.decode_step(params, cache, tokens, cfg, plan)
+
+    return serve_step
+
+
+def jit_serve_step(serve_step, params, cache, cfg: ModelConfig, plan: ParallelPlan):
+    if plan.mesh is None:
+        return jax.jit(serve_step)
+    pspecs = param_specs(params, cfg, plan)
+    cspecs = cache_specs(cache, cfg, plan)
+    tok_spec = P(plan.b, None)
+    sh = lambda tree: jax.tree.map(
+        lambda s: jax.NamedSharding(plan.mesh, s) if isinstance(s, P) else s,
+        tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    logits_spec = P(plan.b, plan.model_axis if cfg.padded_vocab % max(1, plan.tp) == 0 else None)
+    # logits sliced to cfg.vocab (may not divide TP) -> leave unsharded
+    logits_spec = P(plan.b, None)
+    return jax.jit(
+        serve_step,
+        in_shardings=(sh(pspecs), sh(cspecs), sh(tok_spec)),
+        out_shardings=(sh(logits_spec), sh(cspecs)),
+        donate_argnums=(1,),
+    )

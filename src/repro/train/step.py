@@ -1,0 +1,234 @@
+"""Train-step factory: microbatched, remat'd, pjit-sharded, optionally with
+error-bounded gradient compression on the DP reduction.
+
+Two modes:
+  * baseline  — plain pjit: XLA inserts the DP all-reduce (bf16/f32).
+  * compressed (plan.grad_compress_bits in {8,4}) — the step body runs inside
+    a shard_map that is MANUAL over the DP axes (model axis stays auto), so
+    the DP reduction is OUR schedule: reduce-scatter bf16 -> error-feedback
+    quantize -> all-gather int8/int4 (repro/compression/grad.py).
+
+State = {params, opt{m,v,step}, feedback?}.  All specs are derived from
+parallel/specs.py so launch/dryrun.py and examples share one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import models
+from ..compression import grad as gradc
+from ..models.common import ModelConfig
+from ..optim import AdamWConfig, init_state, update, warmup_cosine
+from ..parallel.plan import ParallelPlan
+from ..parallel.specs import batch_specs, param_specs
+
+
+def _moment_spec(pspec: P, leaf_ndim: int, compressed: bool):
+    if not compressed:
+        return pspec
+    entries = tuple(pspec) + (None,) * (leaf_ndim - len(tuple(pspec)))
+    return {"codes": P(*entries), "scale": P(*entries[:-1], None)}
+
+
+def state_specs(state, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfig):
+    params = state["params"] if isinstance(state, dict) and "params" in state else state
+    pspecs = param_specs(params, cfg, plan)
+    flat_pspecs = {
+        _pstr(path): spec
+        for path, spec in jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    }
+
+    def moment_tree(moments):
+        """Spec tree structurally identical to the actual moment pytree."""
+
+        def leaf_spec(path, leaf):
+            names = [_key(p) for p in path]
+            # strip trailing 'codes'/'scale' for Compressed leaves; both have
+            # the parameter's rank (scale swaps the last dim for n_blocks)
+            if names and names[-1] in ("codes", "scale"):
+                pstr = "/".join(names[:-1])
+                base = flat_pspecs.get(pstr, P())
+                nd = leaf.ndim
+                entries = tuple(base) + (None,) * (nd - len(tuple(base)))
+                if names[-1] == "codes":
+                    return P(*entries)
+                return P(*entries[:-1], None)
+            pstr = "/".join(names)
+            return flat_pspecs.get(pstr, P())
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, moments)
+
+    specs = {
+        "params": pspecs,
+        "opt": {
+            "m": moment_tree(state["opt"]["m"]),
+            "v": moment_tree(state["opt"]["v"]),
+            "step": P(),
+        },
+    }
+    if plan.grad_compress_bits:
+        b = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+        specs["feedback"] = P(b)
+    return specs
+
+
+def _key(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _pstr(path) -> str:
+    return "/".join(_key(p) for p in path)
+
+
+def init_train_state(key, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfig):
+    params = models.init_params(key, cfg, plan)
+    state = {"params": params, "opt": init_state(params, opt_cfg)}
+    if plan.grad_compress_bits:
+        state["feedback"] = gradc.init_feedback(params, plan.dp)
+    return state
+
+
+def _microbatched_grads(loss_fn, params, batch, n_micro: int, accum_dtype=jnp.float32):
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    mbatch = jax.tree.map(reshape, batch)
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), mbatch)
+    inv = 1.0 / n_micro
+    return loss * inv, jax.tree.map(lambda g: (g.astype(jnp.float32) * inv), grads)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    total_steps: int = 10000,
+    attn_mode: str = "blocked",
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return models.loss_fn(params, batch, cfg, plan, attn_mode=attn_mode)
+
+    dp_axes = tuple(plan.batch_axes)
+
+    def step_core(state, batch, *, inner_plan: ParallelPlan):
+        def lf(params, b):
+            return models.loss_fn(params, b, cfg, inner_plan, attn_mode=attn_mode)
+
+        loss, grads = _microbatched_grads(
+            lf,
+            state["params"],
+            batch,
+            plan.microbatches,
+            accum_dtype=jnp.dtype(plan.grad_accum_dtype),
+        )
+        new_state = dict(state)
+        if plan.grad_compress_bits:
+            grads, fb = gradc.compressed_reduce_tree(
+                grads, state["feedback"], dp_axes, plan.grad_compress_bits
+            )
+            loss = jax.lax.pmean(loss, dp_axes)
+            new_state["feedback"] = fb
+        lr_scale = warmup_cosine(state["opt"]["step"], total=total_steps)
+        params, opt, metrics = update(
+            state["params"], grads, state["opt"], opt_cfg, lr_scale
+        )
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    if plan.grad_compress_bits and plan.mesh is not None:
+        # dp-manual region: batch constraints are dropped inside (local view)
+        inner_plan = dataclasses.replace(plan, batch_axes=())
+
+        def train_step(state, batch):
+            sspecs = state_specs_cached(state)
+            b = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+            def body(state, batch):
+                return step_core(state, batch, inner_plan=inner_plan)
+
+            bspec = jax.tree.map(
+                lambda x: P(*((b,) + (None,) * (x.ndim - 1))), batch
+            )
+            out = jax.shard_map(
+                body,
+                mesh=plan.mesh,
+                axis_names=set(dp_axes),
+                in_specs=(sspecs, bspec),
+                out_specs=(sspecs, {"grad_norm": P(), "loss": P()}),
+                check_vma=False,
+            )(state, batch)
+            return out
+
+        def state_specs_cached(state):
+            # inside the manual region params are replicated over dp (no
+            # FSDP in compressed mode); feedback is dp-sharded.
+            def rep(x):
+                return P()
+
+            sp = {
+                "params": jax.tree.map(rep, state["params"]),
+                "opt": jax.tree.map(rep, state["opt"]),
+            }
+            b = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            sp["feedback"] = P(b)
+            return sp
+
+        return train_step
+
+    def train_step(state, batch):
+        return step_core(state, batch, inner_plan=plan)
+
+    return train_step
+
+
+def jit_train_step(
+    train_step,
+    state,
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    opt_cfg: AdamWConfig,
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct],
+):
+    """AOT-jit with explicit in/out shardings (the dry-run entry point)."""
+    if plan.mesh is None:
+        return jax.jit(train_step)
+    sspecs = state_specs(state, cfg, plan, opt_cfg)
+    bspecs = batch_specs(batch_shapes, plan)
+    shard = lambda tree: jax.tree.map(
+        lambda s: jax.NamedSharding(plan.mesh, s) if isinstance(s, P) else s,
+        tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    metric_specs = {"grad_norm": P(), "loss": P()}
+    return jax.jit(
+        train_step,
+        in_shardings=(shard(sspecs), shard(bspecs)),
+        out_shardings=(shard(sspecs), shard(metric_specs)),
+        donate_argnums=(0,),
+    )

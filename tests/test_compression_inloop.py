@@ -1,0 +1,99 @@
+"""In-loop compression integrations: grad quant + error feedback, opt-state
+8-bit moments, KV-cache quantization quality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression import kvcache, opt_state
+from repro.compression.grad import (
+    BLOCK,
+    dequantize_shard,
+    quantize_shard,
+)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_grad_quant_roundtrip_bounded(bits):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(5000).astype(np.float32) * 10)
+    codes, scale = quantize_shard(x, bits)
+    back = dequantize_shard(codes, scale, x.shape[0], bits)
+    radius = 127 if bits == 8 else 7
+    # per-block bound: scale/2
+    xp = np.pad(np.asarray(x), (0, (-x.shape[0]) % BLOCK)).reshape(-1, BLOCK)
+    bound = np.repeat(np.asarray(scale) * 0.5001, BLOCK)[: x.shape[0]]
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_error_feedback_unbiased(bits):
+    """with feedback, the time-average of dequantized grads converges to the
+    true gradient (the SZ bound applied temporally)."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
+    fb = jnp.zeros_like(g_true)
+    acc = np.zeros_like(np.asarray(g_true))
+    steps = 50
+    for _ in range(steps):
+        v = g_true + fb
+        codes, scale = quantize_shard(v, bits)
+        d = dequantize_shard(codes, scale, v.shape[0], bits)
+        fb = v - d
+        acc += np.asarray(d)
+    err = np.abs(acc / steps - np.asarray(g_true)).max()
+    assert err < (0.01 if bits == 8 else 0.05), err
+
+
+def test_opt_state_compress_roundtrip():
+    rng = np.random.default_rng(2)
+    for shape in [(100,), (64, 300), (4, 8, 1000), ()]:
+        x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+        c = opt_state.compress(x)
+        back = opt_state.decompress(c)
+        xa = np.asarray(x).reshape(back.shape)
+        scale_rep = np.asarray(c.scale)
+        assert np.abs(np.asarray(back) - xa).max() <= float(scale_rep.max()) * 0.5001
+    assert opt_state.compression_ratio(np.zeros((512, 512))) > 3.5
+
+
+def test_adamw_with_compressed_moments_converges():
+    from repro.optim import AdamWConfig, init_state, update
+
+    dim = 64
+    rng = np.random.default_rng(3)
+    target = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+    params = {"w": jnp.zeros(dim)}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, compress_moments=True)
+    st = init_state(params, cfg)
+    for _ in range(200):
+        g = {"w": params["w"] - target}
+        params, st, _ = update(params, g, st, cfg)
+    assert float(jnp.abs(params["w"] - target).max()) < 0.05
+
+
+def test_kv_quant_bound_and_snr():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((256, 4, 64)).astype(np.float32) * 5)
+    q, s = kvcache.quantize_tokens(x)
+    back = kvcache.dequantize_tokens(q, s)
+    assert np.all(
+        np.abs(np.asarray(back) - np.asarray(x)) <= np.asarray(s)[..., None] * 0.5001
+    )
+    assert kvcache.quantization_snr_db(x) > 40.0
+
+
+def test_kv_cache_bytes_model():
+    bf16 = kvcache.cache_bytes(32768, 8, 128, "bf16")
+    int8 = kvcache.cache_bytes(32768, 8, 128, "int8")
+    assert int8 < bf16 * 0.55  # ~1.94x saving
+
+
+def test_int4_packing_exact():
+    from repro.compression.grad import quantize_shard, dequantize_shard
+
+    x = jnp.asarray(np.linspace(-1, 1, BLOCK, dtype=np.float32))
+    codes, scale = quantize_shard(x, 4)
+    assert codes.size == BLOCK // 2  # two nibbles per byte
+    back = dequantize_shard(codes, scale, BLOCK, 4)
+    assert np.abs(np.asarray(back) - np.asarray(x)).max() <= float(scale[0]) * 0.5001

@@ -1,0 +1,174 @@
+"""Round-trip + error-bound tests for every composed pipeline (paper §3.3)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    SZ3Compressor,
+    decompress,
+    metrics,
+    predictors,
+    preprocess,
+    quantizers,
+    sz3_aps,
+    sz3_interp,
+    sz3_lorenzo,
+    sz3_lr,
+    sz3_pastri,
+    sz3_truncation,
+    sz_pastri,
+    sz_pastri_zstd,
+)
+
+
+def smooth_field(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax) / np.sqrt(shape[ax])
+    return x.astype(dtype)
+
+
+PIPELINES = {
+    "lorenzo": sz3_lorenzo,
+    "lr": sz3_lr,
+    "interp": sz3_interp,
+}
+
+
+@pytest.mark.parametrize("name", list(PIPELINES))
+@pytest.mark.parametrize("shape", [(2000,), (64, 80), (16, 24, 20)])
+@pytest.mark.parametrize("eb", [1e-1, 1e-3])
+def test_abs_bound_roundtrip(name, shape, eb):
+    x = smooth_field(shape, seed=hash((name, shape)) % 100)
+    comp = PIPELINES[name]()
+    res = comp.compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb))
+    xhat = decompress(res.blob)
+    assert xhat.shape == x.shape and xhat.dtype == x.dtype
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6)
+    assert res.ratio > 1.0
+
+
+@pytest.mark.parametrize("name", list(PIPELINES))
+def test_rel_bound(name):
+    x = smooth_field((40, 50), seed=3) * 100.0
+    eb = 1e-3
+    comp = PIPELINES[name]()
+    res = comp.compress(x, CompressionConfig(mode=ErrorBoundMode.REL, eb=eb))
+    xhat = decompress(res.blob)
+    rng = float(x.max() - x.min())
+    assert metrics.max_abs_error(x, xhat) <= eb * rng * (1 + 1e-6)
+
+
+def test_pw_rel_bound_log_transform():
+    rng = np.random.default_rng(0)
+    x = np.exp(rng.normal(0, 3, (50, 40))).astype(np.float64)
+    x[4, 7] = 0.0
+    x[10, 3] = -x[10, 3]
+    comp = SZ3Compressor(
+        preprocessor=preprocess.LogTransform(),
+        predictor=predictors.LorenzoPredictor(),
+    )
+    res = comp.compress(x, CompressionConfig(mode=ErrorBoundMode.PW_REL, eb=1e-3))
+    xhat = decompress(res.blob)
+    assert metrics.max_pw_rel_error(x, xhat) <= 1e-3 * (1 + 1e-9)
+    assert xhat[4, 7] == 0.0
+    assert np.sign(xhat[10, 3]) == np.sign(x[10, 3])
+
+
+def test_f64_tiny_eb():
+    x = smooth_field((5000,), seed=1, dtype=np.float64) * 1e-4
+    eb = 1e-12
+    res = sz3_lorenzo().compress(x, CompressionConfig(eb=eb))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6)
+
+
+def test_pastri_family():
+    rng = np.random.default_rng(2)
+    P = 64
+    pattern = np.exp(-np.linspace(0, 5, P)) * np.cos(np.linspace(0, 15, P))
+    scales = np.exp(rng.normal(0, 2, 500))
+    x = (scales[:, None] * pattern[None, :]).reshape(-1).astype(np.float64)
+    eb = 1e-9
+    ratios = {}
+    for name, mk in [
+        ("sz_pastri", sz_pastri),
+        ("sz_pastri_zstd", sz_pastri_zstd),
+        ("sz3_pastri", sz3_pastri),
+    ]:
+        res = mk(P).compress(x, CompressionConfig(eb=eb))
+        xhat = decompress(res.blob)
+        assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6), name
+        ratios[name] = res.ratio
+    # the paper's ordering: SZ3-Pastri > SZ-Pastri-with-zstd > SZ-Pastri
+    assert ratios["sz3_pastri"] >= ratios["sz_pastri_zstd"] >= ratios["sz_pastri"]
+
+
+def test_pattern_autodetect():
+    P = 48
+    t = np.arange(P * 300, dtype=np.float64)
+    x = np.sin(2 * np.pi * t / P) * np.exp(-((t % P)) / 20)
+    det = predictors.PatternPredictor.detect_period(x)
+    assert det % P == 0 or P % det == 0 or abs(det - P) <= 2
+
+
+def test_aps_adaptive_lossless_on_integers():
+    rng = np.random.default_rng(4)
+    img = rng.poisson(3.0, (32, 16, 16)).astype(np.float32)
+    res = sz3_aps().compress(img, CompressionConfig(eb=0.1))
+    xhat = decompress(res.blob)
+    assert np.array_equal(xhat, img)  # paper: "turns out to be lossless"
+
+
+def test_aps_adaptive_high_eb_switches_pipeline():
+    rng = np.random.default_rng(5)
+    img = rng.poisson(3.0, (32, 16, 16)).astype(np.float32)
+    res = sz3_aps().compress(img, CompressionConfig(eb=4.0))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(img, xhat) <= 4.0 * 1.0001
+
+
+def test_truncation():
+    x = smooth_field((100, 100), seed=6)
+    res = sz3_truncation(2).compress(x)
+    xhat = decompress(res.blob)
+    # byte truncation: bounded relative error per element magnitude scale
+    assert res.ratio == pytest.approx(2.0, rel=0.2)
+    assert np.abs(x - xhat).max() / np.abs(x).max() < 0.01
+
+
+def test_sequential_oracle_matches_bound():
+    x = smooth_field((24, 30), seed=7, dtype=np.float64)
+    comp = SZ3Compressor(predictor=predictors.LorenzoSequentialPredictor())
+    res = comp.compress(x, CompressionConfig(eb=1e-4))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(x, xhat) <= 1e-4 * (1 + 1e-9)
+
+
+def test_second_order_lorenzo():
+    x = smooth_field((50, 60), seed=8)
+    comp = sz3_lorenzo(order=2)
+    res = comp.compress(x, CompressionConfig(eb=1e-3))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(x, xhat) <= 1e-3 * (1 + 1e-6)
+
+
+def test_unpred_aware_beats_linear_on_spiky_data():
+    """Paper §4.2: bitplane storage of unpredictables compresses better."""
+    rng = np.random.default_rng(9)
+    x = smooth_field((30000,), seed=9, dtype=np.float64)
+    spikes = rng.random(x.size) < 0.2
+    x[spikes] += rng.standard_normal(int(spikes.sum())) * 100
+    conf = CompressionConfig(eb=1e-8)
+    r_lin = SZ3Compressor(
+        predictor=predictors.LorenzoPredictor(),
+        quantizer=quantizers.LinearScaleQuantizer(),
+    ).compress(x, conf)
+    r_un = SZ3Compressor(
+        predictor=predictors.LorenzoPredictor(),
+        quantizer=quantizers.UnpredAwareQuantizer(),
+    ).compress(x, conf)
+    assert metrics.max_abs_error(x, decompress(r_un.blob)) <= 1e-8 * (1 + 1e-9)
+    assert r_un.ratio > r_lin.ratio

@@ -1,0 +1,112 @@
+"""Hypothesis property tests for the system's core invariants:
+
+  * error bound holds for EVERY pipeline x shape x eb x data distribution;
+  * encoders and the lossless stage round-trip bit-exactly;
+  * the bitplane codec is exact on arbitrary int64;
+  * dual-quant Lorenzo and the sequential oracle both respect the bound.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    SZ3Compressor,
+    decompress,
+    encoders,
+    metrics,
+    predictors,
+    quantizers,
+)
+from repro.core.quantizers import bitplane_decode, bitplane_encode
+
+
+@st.composite
+def arrays(draw, max_elems=6000):
+    ndim = draw(st.integers(1, 3))
+    dims = draw(
+        st.lists(st.integers(2, 40), min_size=ndim, max_size=ndim).filter(
+            lambda d: int(np.prod(d)) <= max_elems
+        )
+    )
+    seed = draw(st.integers(0, 2**31 - 1))
+    kind = draw(st.sampled_from(["smooth", "noise", "spiky", "constant"]))
+    dtype = draw(st.sampled_from([np.float32, np.float64]))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(dims)
+    if kind == "smooth":
+        for ax in range(len(dims)):
+            x = np.cumsum(x, axis=ax)
+    elif kind == "spiky":
+        mask = rng.random(dims) < 0.1
+        x = x + mask * rng.standard_normal(dims) * 1e4
+    elif kind == "constant":
+        x = np.full(dims, float(rng.normal()))
+    return x.astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    x=arrays(),
+    eb=st.sampled_from([1e-1, 1e-3, 1e-6]),
+    pred=st.sampled_from(["lorenzo", "regression", "interp", "composite"]),
+    quant=st.sampled_from(["linear", "unpred_aware"]),
+)
+def test_error_bound_invariant(x, eb, pred, quant):
+    comp = SZ3Compressor(
+        predictor=predictors.make(pred),
+        quantizer=quantizers.make(quant),
+    )
+    res = comp.compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb))
+    xhat = decompress(res.blob)
+    assert xhat.shape == x.shape
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    syms=st.lists(st.integers(0, 70000), min_size=0, max_size=5000),
+    enc_name=st.sampled_from(["huffman", "bitpack", "raw"]),
+)
+def test_encoder_roundtrip_exact(syms, enc_name):
+    arr = np.asarray(syms, np.uint32)
+    enc = encoders.make(enc_name)
+    blob = enc.encode(arr)
+    out = enc.decode(blob, arr.size)
+    assert np.array_equal(np.asarray(out, np.int64), arr.astype(np.int64))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(
+        st.integers(-(2**62), 2**62), min_size=0, max_size=2000
+    )
+)
+def test_bitplane_roundtrip_exact(vals):
+    arr = np.asarray(vals, np.int64)
+    blob = bitplane_encode(arr)
+    out, consumed = bitplane_decode(blob)
+    assert consumed == len(blob)
+    assert np.array_equal(out, arr)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    codes=st.lists(st.integers(0, 65535), min_size=1, max_size=3000),
+)
+def test_fixed_huffman_roundtrip(codes):
+    arr = np.asarray(codes, np.uint16)
+    enc = encoders.FixedHuffmanEncoder(radius=32768)
+    blob = enc.encode(arr)
+    out = enc.decode(blob, arr.size)
+    assert np.array_equal(out.astype(np.int64), arr.astype(np.int64))
+
+
+@settings(max_examples=15, deadline=None)
+@given(x=arrays(max_elems=1500), eb=st.sampled_from([1e-2, 1e-4]))
+def test_sequential_vs_dualquant_both_bounded(x, eb):
+    for pred in [predictors.LorenzoPredictor(), predictors.LorenzoSequentialPredictor()]:
+        comp = SZ3Compressor(predictor=pred)
+        res = comp.compress(x, CompressionConfig(eb=eb))
+        xhat = decompress(res.blob)
+        assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6), type(pred).__name__

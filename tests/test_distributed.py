@@ -1,0 +1,160 @@
+"""Multi-device semantics on 8 fake CPU devices (subprocess: the fake device
+count must be set before jax initializes, and the main test process keeps 1
+device per the harness contract).
+
+Covers: sharded-vs-single-device train-step parity, MoE expert-parallel
+parity, compressed-gradient DP reduction, and elastic restore onto a
+different mesh.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _run(body: str, timeout=600):
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        import repro.configs as configs
+        from repro import models
+        from repro.data import make_pipeline
+        from repro.optim import AdamWConfig
+        from repro.parallel import ParallelPlan
+        from repro.parallel.specs import param_specs
+        from repro.train.step import init_train_state, make_train_step, jit_train_step
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single_device():
+    out = _run(
+        """
+        cfg = configs.get_smoke("qwen1.5-0.5b")  # kv divides tp: same param shapes
+        opt = AdamWConfig(lr=1e-3)
+        pipe = make_pipeline(cfg, seq=16, global_batch=4)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+
+        plan1 = ParallelPlan()
+        s1 = init_train_state(jax.random.PRNGKey(0), cfg, plan1, opt)
+        st1 = make_train_step(cfg, plan1, opt)
+        s1b, m1 = st1(s1, batch)
+
+        plan8 = ParallelPlan(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",))
+        s8 = init_train_state(jax.random.PRNGKey(0), cfg, plan8, opt)
+        st8 = make_train_step(cfg, plan8, opt)
+        j8 = jit_train_step(st8, s8, cfg, plan8, opt, batch)
+        s8b, m8 = j8(s8, batch)
+        print("loss1", float(m1["loss"]), "loss8", float(m8["loss"]))
+        assert abs(float(m1["loss"]) - float(m8["loss"])) < 5e-3
+        w1 = np.asarray(jax.tree.leaves(s1b["params"])[0], np.float32)
+        w8 = np.asarray(jax.tree.leaves(s8b["params"])[0], np.float32)
+        np.testing.assert_allclose(w1, w8, atol=3e-3)
+        print("PARITY OK")
+        """
+    )
+    assert "PARITY OK" in out
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel_parity():
+    out = _run(
+        """
+        cfg = configs.get_smoke("deepseek-moe-16b")
+        plan1 = ParallelPlan()
+        plan8 = ParallelPlan(mesh=mesh, batch_axes=("data",))
+        params = models.init_params(jax.random.PRNGKey(0), cfg, plan1)
+        pipe = make_pipeline(cfg, seq=16, global_batch=4)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        l1 = float(models.loss_fn(params, batch, cfg, plan1))
+        l8 = float(models.loss_fn(params, batch, cfg, plan8))
+        print("l1", l1, "l8", l8)
+        # EP capacity is per-shard in the 8-device run; small drop differences
+        assert abs(l1 - l8) < 0.1  # capacity-drop differences per shard
+        print("MOE PARITY OK")
+        """
+    )
+    assert "MOE PARITY OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.xfail(
+    reason="XLA-CPU SPMD bug: partial-manual shard_map (dp manual, model "
+    "auto) around remat+scan train bodies aborts with 'Invalid binary "
+    "instruction opcode copy' (hlo_instruction.cc:1558). The compressed-DP "
+    "algorithm itself is validated in tests/test_compression_inloop.py and "
+    "benchmarks/bench_integrations.py; re-enable on TPU/Shardy backends.",
+    run=False,
+)
+def test_grad_compressed_train_step_runs_and_converges():
+    out = _run(
+        """
+        cfg = configs.get_smoke("qwen1.5-0.5b")
+        opt = AdamWConfig(lr=3e-3, weight_decay=0.0)
+        plan = ParallelPlan(mesh=mesh, batch_axes=("data",), grad_compress_bits=8)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, plan, opt)
+        step = make_train_step(cfg, plan, opt, total_steps=40)
+        pipe = make_pipeline(cfg, seq=16, global_batch=4)
+        losses = []
+        for k in range(12):
+            batch = {k2: jnp.asarray(v) for k2, v in pipe.batch_at(k % 3).items()}
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        print("losses", losses[0], losses[-1])
+        assert losses[-1] < losses[0] - 0.2
+        print("COMPRESSED DP OK")
+        """
+    )
+    assert "COMPRESSED DP OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore_to_different_mesh(tmp_path):
+    out = _run(
+        f"""
+        import numpy as np
+        from repro.ft import CheckpointManager, CheckpointPolicy, LeafPolicy
+        from repro.ft.elastic import make_elastic_mesh, reshard_state
+        cfg = configs.get_smoke("granite-3-8b")
+        opt = AdamWConfig(lr=1e-3)
+        plan8 = ParallelPlan(mesh=mesh, batch_axes=("data",), fsdp_axes=("data",))
+        s8 = init_train_state(jax.random.PRNGKey(0), cfg, plan8, opt)
+        mgr = CheckpointManager(r"{tmp_path}", CheckpointPolicy(rules=(("", LeafPolicy("lossless")),)), use_async=False)
+        mgr.save(1, s8)
+        mgr.wait()
+        # restore onto a 4-device mesh (simulating 4 lost devices)
+        mesh4 = jax.sharding.Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+        template = jax.tree.map(np.asarray, s8)
+        host, _ = mgr.restore(template)
+        from repro.parallel.specs import param_specs
+        import dataclasses
+        plan4 = dataclasses.replace(plan8, mesh=mesh4)
+        pspecs = param_specs(host["params"], cfg, plan4)
+        resharded = reshard_state(host["params"], pspecs, mesh4)
+        l0 = jax.tree.leaves(resharded)[0]
+        assert len(l0.sharding.device_set) in (2, 4)
+        # and the values survived
+        np.testing.assert_array_equal(
+            np.asarray(l0, np.float32),
+            np.asarray(jax.tree.leaves(s8["params"])[0], np.float32))
+        print("ELASTIC OK")
+        """
+    )
+    assert "ELASTIC OK" in out

@@ -1,0 +1,70 @@
+"""The while-trip-corrected HLO cost parser vs analytic ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_trip_correction():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+    c = _compile(f, x, ws)
+    cost = hlo_cost.analyze(c.as_text())
+    expect = 10 * 2 * 128 * 256 * 256
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+    assert 10 in cost.while_trips.values()
+
+
+def test_nested_scan():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def ob(x, _):
+            y, _ = jax.lax.scan(inner, x, ws)
+            return y, None
+
+        y, _ = jax.lax.scan(ob, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = _compile(outer, x, ws)
+    cost = hlo_cost.analyze(c.as_text())
+    expect = 3 * 5 * 2 * 64 * 64 * 64
+    assert abs(cost.dot_flops - expect) / expect < 0.05
+
+
+def test_dot_flops_batched():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    c = _compile(f, a, b)
+    cost = hlo_cost.analyze(c.as_text())
+    expect = 2 * 4 * 32 * 16 * 64
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+
+
+def test_memory_bytes_sane():
+    def f(a):
+        return a * 2.0 + 1.0
+
+    a = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+    c = _compile(f, a)
+    cost = hlo_cost.analyze(c.as_text())
+    # one fused read + one write = 8MB +- fusion details
+    assert 4e6 <= cost.hbm_bytes <= 2e7

@@ -1,0 +1,87 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.bitplane import (
+    bitplane_decode,
+    bitplane_encode,
+    ref_encode as bp_ref_encode,
+)
+from repro.kernels.kvquant import (
+    kv_dequant_matmul,
+    kv_quantize,
+    ref_dequant_matmul,
+    ref_quantize,
+)
+from repro.kernels.lorenzo import (
+    lorenzo_decode,
+    lorenzo_encode,
+    ref_decode,
+    ref_encode,
+)
+
+
+@pytest.mark.parametrize(
+    "shape", [(100, 300), (256, 512), (7, 50), (1, 1000), (513, 129), (8, 128)]
+)
+@pytest.mark.parametrize("mode", ["1d", "2d"])
+@pytest.mark.parametrize("eb", [1e-1, 1e-3])
+def test_lorenzo_kernel_equals_ref(shape, mode, eb):
+    rng = np.random.default_rng(abs(hash((shape, mode))) % 1000)
+    x = np.cumsum(rng.normal(size=shape).astype(np.float32), axis=1)
+    c_k, d_k = lorenzo_encode(jnp.asarray(x), eb=eb, mode=mode)
+    c_r, d_r = ref_encode(x, eb, mode=mode)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    xh_k = lorenzo_decode(d_k, eb=eb, mode=mode)
+    xh_r = ref_decode(d_r, eb, mode=mode)
+    np.testing.assert_array_equal(np.asarray(xh_k), np.asarray(xh_r))
+    tol = eb + np.abs(x).max() * 3e-7  # f32 reciprocal-grid tolerance
+    assert np.max(np.abs(np.asarray(xh_k) - x)) <= tol
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_lorenzo_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = np.cumsum(rng.normal(size=(64, 256)).astype(dtype), axis=1)
+    c_k, d_k = lorenzo_encode(jnp.asarray(x, jnp.float32), eb=1e-2, mode="2d")
+    xh = lorenzo_decode(d_k, eb=1e-2, mode="2d")
+    assert np.max(np.abs(np.asarray(xh) - x.astype(np.float32))) <= 1e-2 + 1e-4
+
+
+@pytest.mark.parametrize("n", [5, 100, 16384, 40000])
+def test_bitplane_kernel(n):
+    rng = np.random.default_rng(n)
+    vals = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    w_k = np.asarray(bitplane_encode(jnp.asarray(vals)))
+    w_r = np.asarray(bp_ref_encode(vals))
+    np.testing.assert_array_equal(w_k[:, : w_r.shape[1]], w_r)
+    back = np.asarray(bitplane_decode(jnp.asarray(w_k), n))
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_bitplane_sparsity_structure():
+    """Small-magnitude values must leave significant planes all-zero (the
+    §4.2 compressibility property)."""
+    vals = np.arange(4096, dtype=np.uint32) % 16  # only 4 low bits used
+    w = np.asarray(bitplane_encode(jnp.asarray(vals)))
+    assert np.all(w[4:, :] == 0)
+
+
+@pytest.mark.parametrize("shape", [(300, 96), (512, 128), (64, 64), (33, 200)])
+def test_kvquant_kernel(shape):
+    rng = np.random.default_rng(abs(hash(shape)) % 997)
+    T, C = shape
+    x = rng.normal(0, 2, size=shape).astype(np.float32) * (1 + np.arange(C))[None, :]
+    q_k, s_k = kv_quantize(jnp.asarray(x))
+    q_r, s_r = ref_quantize(x)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    deq = np.asarray(q_k).astype(np.float32) * np.asarray(s_k)[None, :]
+    assert np.all(np.abs(deq - x) <= np.asarray(s_k)[None, :] * 0.5001)
+    a = rng.normal(size=(48, T)).astype(np.float32)
+    o_k = np.asarray(kv_dequant_matmul(jnp.asarray(a), q_k, s_k))
+    o_r = np.asarray(ref_dequant_matmul(a, q_r, s_r))
+    bound = 1e-6 * (np.abs(a) @ np.abs(deq)) + 1e-4
+    assert np.all(np.abs(o_k - o_r) <= bound)

@@ -1,0 +1,134 @@
+"""Per-arch reduced-config smoke tests (deliverable f): one forward/train
+step on CPU asserting output shapes + no NaNs, plus a decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import models
+from repro.data import make_pipeline
+from repro.parallel import ParallelPlan
+
+PLAN = ParallelPlan()
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    pipe = make_pipeline(cfg, seq=S, global_batch=B, seed=0)
+    b = pipe.batch_at(0)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = models.init_params(key, cfg, PLAN)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: models.loss_fn(p, batch, cfg, PLAN)
+    )(params)
+    assert jnp.isfinite(loss), arch
+    assert 2.0 < float(loss) < 20.0, (arch, float(loss))
+    gnorm = sum(
+        float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree.leaves(grads)
+    )
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = models.init_params(key, cfg, PLAN)
+    batch = _batch(cfg, key)
+    cache = models.init_cache(
+        params, cfg, PLAN, B, 16, enc_frames=batch.get("enc_frames")
+    )
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = models.decode_step(params, cache, tok, cfg, PLAN)
+        tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_values(arch):
+    """The exact assigned config is instantiable (metadata only, no alloc)."""
+    cfg = configs.get(arch)
+    assert cfg.n_layers >= 12 and cfg.d_model >= 768
+    assert cfg.padded_vocab % cfg.vocab_pad_to == 0
+    assert cfg.n_flop_params() > 1e8
+    kinds = cfg.block_kinds()
+    if cfg.family == "hybrid":
+        assert "shared_attn" in kinds and "ssm" in kinds
+
+
+def test_exact_assigned_dims():
+    c = configs.get("nemotron-4-340b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        96, 18432, 96, 8, 73728, 256000,
+    )
+    c = configs.get("deepseek-moe-16b")
+    assert (c.n_experts, c.top_k, c.n_shared_experts, c.moe_d_ff) == (64, 6, 2, 1408)
+    c = configs.get("qwen3-moe-30b-a3b")
+    assert (c.n_experts, c.top_k, c.head_dim) == (128, 8, 128)
+    c = configs.get("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (64, 2560, 128)
+    c = configs.get("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = configs.get("h2o-danube-1.8b")
+    assert c.sliding_window is not None
+
+
+def test_prefill_matches_decode_chain():
+    """prefill logits at position t == decode-step logits after consuming
+    t tokens (cache correctness)."""
+    cfg = configs.get_smoke("granite-3-8b")
+    key = jax.random.PRNGKey(2)
+    params = models.init_params(key, cfg, PLAN)
+    toks = jax.random.randint(key, (1, 6), 0, cfg.vocab)
+    pre = models.prefill_logits(params, {"tokens": toks}, cfg, PLAN)
+    cache = models.init_cache(params, cfg, PLAN, 1, 16)
+    for t in range(6):
+        logits, cache = models.decode_step(params, cache, toks[:, t : t + 1], cfg, PLAN)
+    np.testing.assert_allclose(
+        np.asarray(pre), np.asarray(logits), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_swa_decode_ring_wraps():
+    """Sliding-window cache must evict old tokens but keep exact recent ones."""
+    cfg = configs.get_smoke("h2o-danube-1.8b")  # window 16
+    key = jax.random.PRNGKey(3)
+    params = models.init_params(key, cfg, PLAN)
+    toks = jax.random.randint(key, (1, 24), 0, cfg.vocab)
+    cache = models.init_cache(params, cfg, PLAN, 1, 24)
+    W = cache.k.shape[2]
+    assert W == cfg.sliding_window  # ring sized to the window
+    for t in range(24):
+        logits, cache = models.decode_step(params, cache, toks[:, t : t + 1], cfg, PLAN)
+    assert bool(jnp.isfinite(logits).all())
+    pre = models.prefill_logits(params, {"tokens": toks}, cfg, PLAN)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(logits), rtol=3e-3, atol=3e-3)
+
+
+def test_int8_kv_cache_close_to_bf16():
+    import dataclasses
+
+    cfg = configs.get_smoke("granite-3-8b")
+    key = jax.random.PRNGKey(4)
+    params = models.init_params(key, cfg, PLAN)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    outs = {}
+    for dt in ["bf16", "int8"]:
+        plan = dataclasses.replace(PLAN, kv_cache_dtype=dt)
+        cache = models.init_cache(params, cfg, plan, 2, 16)
+        for t in range(8):
+            logits, cache = models.decode_step(params, cache, toks[:, t : t + 1], cfg, plan)
+        outs[dt] = np.asarray(jax.nn.log_softmax(logits))
+    # int8 per-token quantization: small logprob drift
+    drift = np.abs(outs["bf16"] - outs["int8"]).max()
+    assert drift < 0.3, drift
