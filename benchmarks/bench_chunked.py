@@ -1,0 +1,114 @@
+"""Chunked engine vs one-shot pipelines: ratio parity + streaming throughput.
+
+Three questions, per field:
+  1. does per-chunk adaptive selection match (or beat) the best one-shot
+     pipeline's ratio at the same bound?  (acceptance: within +-5% on the
+     GAMESS-like stream at abs eb 1e-3)
+  2. what does chunking cost/gain in compress+decompress MB/s?
+  3. does the frame stream round-trip with the error bound intact?
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    ChunkedCompressor,
+    CompressionConfig,
+    ErrorBoundMode,
+    compress_stream,
+    decompress,
+    decompress_stream,
+    sz3_lorenzo,
+    sz3_lr,
+)
+
+from . import datasets
+
+
+def _bench_one(name, data, conf, chunk_bytes):
+    rows = []
+    abs_eb = conf.resolve_abs_eb(
+        float(data.max() - data.min()), float(np.abs(data).max())
+    )
+    for cname, comp in [
+        ("one-shot SZ3-LR", sz3_lr()),
+        ("one-shot SZ3-Lorenzo", sz3_lorenzo()),
+        ("chunked-adaptive", ChunkedCompressor(chunk_bytes=chunk_bytes)),
+    ]:
+        t0 = time.perf_counter()
+        res = comp.compress(data, conf)
+        c_dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        xhat = decompress(res.blob)
+        d_dt = time.perf_counter() - t0
+        err = float(np.abs(data.astype(np.float64) - xhat.astype(np.float64)).max())
+        rows.append(
+            {
+                "field": name,
+                "engine": cname,
+                "ratio": round(res.ratio, 3),
+                "compress_MBps": round(data.nbytes / 1e6 / c_dt, 1),
+                "decompress_MBps": round(data.nbytes / 1e6 / d_dt, 1),
+                "max_err": err,
+                "bound_ok": bool(err <= abs_eb * (1 + 1e-12)),
+            }
+        )
+    # streaming path: frames produced/consumed one chunk at a time
+    t0 = time.perf_counter()
+    n_out = 0
+    frames = []
+    for frame in compress_stream(data, conf, chunk_bytes=chunk_bytes):
+        n_out += len(frame)
+        frames.append(frame)
+    parts = [p for p in decompress_stream(frames)]
+    s_dt = time.perf_counter() - t0
+    xs = np.concatenate([np.atleast_1d(p) for p in parts]).reshape(data.shape)
+    err = float(np.abs(data.astype(np.float64) - xs.astype(np.float64)).max())
+    rows.append(
+        {
+            "field": name,
+            "engine": "chunked-stream(rt)",
+            "ratio": round(data.nbytes / max(1, n_out), 3),
+            "compress_MBps": round(data.nbytes / 1e6 / s_dt, 1),
+            "decompress_MBps": float("nan"),
+            "max_err": err,
+            "bound_ok": bool(err <= abs_eb * (1 + 1e-12)),
+        }
+    )
+    return rows
+
+
+def run(full: bool = False, chunk_bytes: int = 1 << 22):
+    n_blocks = 20000 if full else 4000
+    shape = (192, 192, 192) if full else (96, 96, 96)
+    fields = {
+        "gamess_eri": (
+            datasets.gamess_eri(n_blocks=n_blocks),
+            CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3),
+        ),
+        "miranda_u": (
+            datasets.domain_field("miranda_u")[tuple(slice(0, s) for s in shape)],
+            CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3),
+        ),
+    }
+    rows = []
+    for name, (data, conf) in fields.items():
+        rows += _bench_one(name, np.ascontiguousarray(data), conf, chunk_bytes)
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print("field,engine,ratio,compress_MBps,decompress_MBps,max_err,bound_ok")
+    for r in rows:
+        print(
+            f"{r['field']},{r['engine']},{r['ratio']},{r['compress_MBps']},"
+            f"{r['decompress_MBps']},{r['max_err']:.3e},{r['bound_ok']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main(True)

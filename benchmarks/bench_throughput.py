@@ -14,6 +14,7 @@ from repro.core import (
     CompressionConfig,
     ErrorBoundMode,
     decompress,
+    sz3_chunked,
     sz3_interp,
     sz3_lorenzo,
     sz3_lr,
@@ -34,6 +35,7 @@ def run(fields=None, seed: int = 3, repeats: int = 1):
             ("SZ3-Lorenzo(dualquant)", sz3_lorenzo()),
             ("SZ3-LR", sz3_lr()),
             ("SZ3-Interp", sz3_interp()),
+            ("SZ3-Chunked(adaptive)", sz3_chunked(chunk_bytes=1 << 21)),
         ]:
             t0 = time.perf_counter()
             for _ in range(repeats):

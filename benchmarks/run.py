@@ -10,6 +10,7 @@ to stdout above each summary line.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -20,22 +21,29 @@ def _timed(name, fn, full):
         derived = fn(full)
         dt = (time.perf_counter() - t0) * 1e6
         print(f"{name},{dt:.0f},ok")
-        return derived
+        return {"name": name, "us": dt, "status": "ok", "derived": derived}
     except Exception as e:
         dt = (time.perf_counter() - t0) * 1e6
         traceback.print_exc()
         print(f"{name},{dt:.0f},FAILED:{e}")
-        return None
+        return {"name": name, "us": dt, "status": f"FAILED:{e}", "derived": None}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write results (name/us/status/derived rows) to a JSON artifact",
+    )
     args = ap.parse_args()
 
     from . import (
         bench_aps,
+        bench_chunked,
         bench_gamess,
         bench_integrations,
         bench_pipelines,
@@ -49,15 +57,21 @@ def main() -> None:
         "aps_fig6": bench_aps.main,  # paper Fig 6
         "pipelines_fig7": bench_pipelines.main,  # paper Fig 7
         "throughput_fig8": bench_throughput.main,  # paper Fig 8
+        "chunked_streaming": bench_chunked.main,  # chunked engine vs one-shot
         "sustainability_s6_1": bench_sustainability.main,  # paper §6.1/Table 2
         "integrations": bench_integrations.main,  # beyond-paper (grad/kv/opt/ckpt)
         "roofline": roofline.main,  # deliverable (g)
     }
     print("name,us_per_call,derived")
+    results = []
     for name, fn in benches.items():
         if args.only and args.only not in name:
             continue
-        _timed(name, fn, args.full)
+        results.append(_timed(name, fn, args.full))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"full": args.full, "results": results}, f, default=str, indent=1)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@ encoder -> lossless) composed per §3.3, plus the customized pipelines of §4
 """
 from . import encoders, lossless, metrics, predictors, preprocess, quantizers
 from .config import CompressionConfig, ErrorBoundMode
-from .pipeline import (
+from .pipeline import (  # noqa: I001  (chunking must import after pipeline)
     PIPELINES,
     AdaptiveAPSCompressor,
     CompressionResult,
@@ -22,6 +22,18 @@ from .pipeline import (
     sz3_truncation,
     sz_pastri,
     sz_pastri_zstd,
+)
+from . import chunking
+from .chunking import (
+    ChunkedCompressor,
+    compress_stream,
+    decompress_chunk,
+    decompress_stream,
+    frames_to_blob,
+    read_frames,
+    select_pipeline,
+    sz3_chunked,
+    write_frames,
 )
 
 __all__ = [
@@ -42,6 +54,16 @@ __all__ = [
     "sz_pastri_zstd",
     "sz3_pastri",
     "sz3_aps",
+    "ChunkedCompressor",
+    "sz3_chunked",
+    "compress_stream",
+    "decompress_stream",
+    "decompress_chunk",
+    "frames_to_blob",
+    "write_frames",
+    "read_frames",
+    "select_pipeline",
+    "chunking",
     "encoders",
     "lossless",
     "metrics",

@@ -1,0 +1,467 @@
+"""Streaming chunked compression with per-chunk adaptive pipeline selection.
+
+The paper composes ONE pipeline for a whole array (§3.3).  This module lifts
+the composite predictor's estimate-and-pick contest (§3.2) one level up: the
+array is split into fixed-byte-budget chunks along the leading axis, and for
+EACH chunk the best-fit *pipeline spec* is chosen by the paper's sampled
+error-estimation criterion — a contiguous sample of the chunk is scored by
+every candidate's ``Predictor.estimate_error`` (falling back to trial
+compression of the sample when a candidate has no cheap estimator, e.g. the
+Pastri pattern pipeline).  This is the chunk-granular analogue of Tao et
+al.'s automatic SZ/ZFP selection (arXiv:1806.08901) and the substrate for
+sharded / async execution.
+
+Two I/O shapes:
+
+  * one-shot — ``ChunkedCompressor.compress`` returns a self-describing v2
+    container: the header records per-chunk (pipeline, offset, length) and
+    the body concatenates ordinary v1 blobs, so every chunk is independently
+    decodable (random access) and v1 blobs keep decoding unchanged.
+  * streaming — ``compress_stream`` / ``decompress_stream`` iterate frames
+    (a prologue + one v1 blob per chunk) with bounded memory: at no point is
+    more than one chunk of raw data plus its blob resident.  ``frames_to_blob``
+    reassembles the exact one-shot container from a frame stream.
+
+Error-bound semantics: REL/PW_REL bounds are resolved to an ABS bound against
+the GLOBAL array statistics before chunking (so chunked output honours the
+same bound as one-shot compression).  When compressing an unbounded iterator
+of slabs the global range is unknown; REL then resolves per-slab, which is
+strictly tighter on low-range slabs (documented, still error-bounded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import msgpack
+import numpy as np
+
+from . import pipeline as pl_mod
+from .config import CompressionConfig, ErrorBoundMode
+from .pipeline import CompressionResult, pack_container
+
+_STREAM_MAGIC = b"SZ3S"
+_VERSION2 = 2
+
+#: default contest entrants: the three §6.2 pipelines with distinct strengths
+DEFAULT_CANDIDATES: Tuple[str, ...] = ("sz3_lorenzo", "sz3_lr", "sz3_interp")
+
+#: elements drawn from each chunk for candidate scoring
+SAMPLE_BUDGET = 4096
+
+
+# ---------------------------------------------------------------------------
+# chunk geometry
+# ---------------------------------------------------------------------------
+
+def chunk_slices(
+    shape: Sequence[int], itemsize: int, chunk_bytes: int
+) -> List[slice]:
+    """Split the leading axis into slabs of at most ``chunk_bytes`` each.
+
+    Returns slices over axis 0.  Inner axes stay whole so every chunk keeps
+    the array's dimensionality (predictors see real N-d neighbourhoods).
+    """
+    if not shape or int(np.prod(shape)) == 0:
+        return [slice(0, shape[0] if shape else 0)]
+    row_bytes = int(np.prod(shape[1:], dtype=np.int64)) * itemsize
+    rows = max(1, int(chunk_bytes) // max(1, row_bytes))
+    n0 = int(shape[0])
+    return [slice(i, min(i + rows, n0)) for i in range(0, n0, rows)]
+
+
+def _sample_block(chunk: np.ndarray, budget: int = SAMPLE_BUDGET) -> np.ndarray:
+    """Centred contiguous sub-block with ~budget elements.
+
+    Contiguity (vs strided decimation) keeps neighbour statistics intact, so
+    stencil predictors are not penalized relative to fit-based ones.  Budget
+    unused by short axes is redistributed to the long ones (smallest axis
+    first), so skinny chunks like (1, 4M) still yield a ~budget-sized sample
+    instead of a statistically blind sliver.
+    """
+    if chunk.size <= budget:
+        return chunk
+    takes = [1] * chunk.ndim
+    rem = budget
+    for i, ax in enumerate(np.argsort(chunk.shape)):
+        axes_left = chunk.ndim - i
+        side = max(1, int(rem ** (1.0 / axes_left) + 1e-9))
+        takes[ax] = min(chunk.shape[ax], side)
+        rem = max(1, rem // takes[ax])
+    sl = tuple(
+        slice((dim - t) // 2, (dim - t) // 2 + t)
+        for dim, t in zip(chunk.shape, takes)
+    )
+    return chunk[sl]
+
+
+# ---------------------------------------------------------------------------
+# per-chunk pipeline selection (paper §3.2 estimate_error, lifted to pipelines)
+# ---------------------------------------------------------------------------
+
+def _make_pipeline(name: str):
+    try:
+        factory = pl_mod.PIPELINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown pipeline {name!r}; have {sorted(pl_mod.PIPELINES)}"
+        ) from None
+    return factory()
+
+#: estimate scores within this factor of the best are "too close to call" and
+#: go to a trial-compression runoff on the sample
+RUNOFF_MARGIN = 1.3
+
+#: below this many estimated bits/element the data is trivially compressible
+#: by every close candidate — estimates alone decide, skipping the runoff
+TRIVIAL_BITS = 0.05
+
+
+def _trial_bits(comp, sample: np.ndarray, eff: CompressionConfig) -> float:
+    try:
+        return 8.0 * len(comp.compress(sample, eff).blob) / max(1, sample.size)
+    except Exception:
+        return float("inf")
+
+
+def select_pipeline(
+    chunk: np.ndarray,
+    abs_eb: float,
+    conf: CompressionConfig,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    pipelines: Optional[Dict[str, Any]] = None,
+) -> Tuple[str, Dict[str, float]]:
+    """Pick the candidate pipeline with the lowest estimated cost on a sample.
+
+    Two-stage contest, all scores in estimated bits/element:
+
+      1. every candidate's ``Predictor.estimate_error`` scores the sample
+         (paper §3.2 criterion, generalized); candidates scoring beyond
+         ``RUNOFF_MARGIN`` x best are eliminated.
+      2. if several finalists remain (the estimators' fidelity is ~tens of
+         percent, not single digits), the sample itself is trial-compressed
+         by each finalist and measured bytes decide.  Skipped when the best
+         estimate is under ``TRIVIAL_BITS`` — near-free data makes every
+         candidate a "finalist" and the runoff would burn time to pick
+         between equivalents.
+
+    Candidates without a cheap estimator (e.g. the Pastri pattern pipeline)
+    go straight to the trial stage.  ``pipelines`` lets callers pass
+    pre-built instances keyed by name (avoids per-chunk reconstruction).
+    Returns (winner, stage-1 scores).
+    """
+    if len(candidates) == 1:
+        return candidates[0], {candidates[0]: 0.0}
+    if pipelines is None:
+        pipelines = {name: _make_pipeline(name) for name in candidates}
+    sample = _sample_block(np.asarray(chunk))
+    eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
+    ests: Dict[str, Optional[float]] = {}
+    for name in candidates:
+        pred = getattr(pipelines[name], "predictor", None)
+        ests[name] = (
+            pred.estimate_error(sample, abs_eb, conf) if pred is not None else None
+        )
+    estimated = {k: float(v) for k, v in ests.items() if v is not None}
+    finalists = [k for k, v in ests.items() if v is None]  # no estimator -> runoff
+    if estimated:
+        best = min(estimated.values())
+        if best <= TRIVIAL_BITS and not finalists:
+            return min(estimated, key=lambda n: (estimated[n], candidates.index(n))), estimated
+        finalists += [
+            k for k, v in estimated.items() if v <= best * RUNOFF_MARGIN + 1e-12
+        ]
+    if len(finalists) == 1:
+        return finalists[0], estimated
+    runoff = {name: _trial_bits(pipelines[name], sample, eff) for name in finalists}
+    winner = min(finalists, key=lambda n: (runoff[n], candidates.index(n)))
+    return winner, estimated or runoff
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChunkRecord:
+    """Header entry for one chunk of a v2 container."""
+
+    off: int  # byte offset of the chunk's v1 blob within the body
+    length: int
+    n0: int  # extent along the chunk axis
+    pipeline: str  # winning candidate name (observability; blob self-describes)
+
+    def to_header(self) -> Dict[str, Any]:
+        return {
+            "off": int(self.off),
+            "len": int(self.length),
+            "n0": int(self.n0),
+            "pipeline": self.pipeline,
+        }
+
+
+class ChunkedCompressor:
+    """Fixed-budget chunking + per-chunk adaptive pipeline selection.
+
+    Drives each chunk through the existing Algorithm-1 driver of the winning
+    candidate; emits the v2 multi-chunk container (or a frame stream).
+    """
+
+    kind = "chunked"
+
+    def __init__(
+        self,
+        candidates: Sequence[str] = DEFAULT_CANDIDATES,
+        chunk_bytes: int = 1 << 22,
+        conf: Optional[CompressionConfig] = None,
+    ):
+        self.candidates = tuple(candidates)
+        self.chunk_bytes = int(chunk_bytes)
+        self.conf = conf or CompressionConfig()
+
+    # -- shared per-chunk path ----------------------------------------------
+    def _chunk_frames(
+        self, data: np.ndarray, conf: CompressionConfig
+    ) -> Iterator[Tuple[bytes, str, int]]:
+        """Yield (v1 blob, pipeline name, axis-0 extent) per chunk."""
+        data = np.asarray(data)
+        if data.dtype not in (np.float32, np.float64):
+            data = data.astype(np.float32)
+        rng = float(data.max() - data.min()) if data.size else 0.0
+        absmax = float(np.abs(data).max()) if data.size else 0.0
+        abs_eb = conf.resolve_abs_eb(rng, absmax)
+        if abs_eb <= 0:
+            abs_eb = float(np.finfo(np.float64).tiny)
+        eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
+        flat_leading = data.reshape(-1) if data.ndim == 0 else data
+        pipelines = {name: _make_pipeline(name) for name in self.candidates}
+        for sl in chunk_slices(
+            flat_leading.shape, flat_leading.dtype.itemsize, self.chunk_bytes
+        ):
+            chunk = flat_leading[sl]
+            name, _scores = select_pipeline(
+                chunk, abs_eb, eff, self.candidates, pipelines=pipelines
+            )
+            blob = pipelines[name].compress(chunk, eff).blob
+            yield blob, name, int(chunk.shape[0] if chunk.ndim else chunk.size)
+
+    # -- one-shot v2 container ----------------------------------------------
+    def compress(
+        self,
+        data: np.ndarray,
+        conf: Optional[CompressionConfig] = None,
+        with_stats: bool = False,
+    ) -> CompressionResult:
+        conf = conf or self.conf
+        data = np.asarray(data)
+        stored_dtype = (
+            data.dtype if data.dtype in (np.float32, np.float64) else np.dtype(np.float32)
+        )
+        records: List[ChunkRecord] = []
+        body_parts: List[bytes] = []
+        off = 0
+        for blob, name, n0 in self._chunk_frames(data, conf):
+            records.append(ChunkRecord(off, len(blob), n0, name))
+            body_parts.append(blob)
+            off += len(blob)
+        blob = _assemble_v2(
+            tuple(data.shape), stored_dtype, records, body_parts, conf
+        )
+        meta = {"chunks": [r.to_header() for r in records]}
+        # ratio against POST-cast bytes, matching the v1 driver's accounting
+        nbytes = data.size * np.dtype(stored_dtype).itemsize
+        return CompressionResult(
+            blob=blob,
+            ratio=nbytes / max(1, len(blob)),
+            meta=meta if with_stats else None,
+        )
+
+
+def _assemble_v2(
+    shape: Tuple[int, ...],
+    dtype: np.dtype,
+    records: Sequence[ChunkRecord],
+    body_parts: Sequence[bytes],
+    conf: CompressionConfig,
+) -> bytes:
+    header = {
+        "v": _VERSION2,
+        "kind": "chunked",
+        "shape": list(shape),
+        "dtype": np.dtype(dtype).str,
+        "axis": 0,
+        "mode": conf.mode.value,
+        "eb": float(conf.eb),
+        "chunks": [r.to_header() for r in records],
+    }
+    return pack_container(header, b"".join(body_parts))
+
+
+def decompress_chunked(
+    blob: bytes, header: Dict[str, Any], body_off: int
+) -> np.ndarray:
+    """Decode a v2 multi-chunk container (called from pipeline.decompress)."""
+    parts = [
+        pl_mod.decompress(blob[body_off + c["off"] : body_off + c["off"] + c["len"]])
+        for c in header["chunks"]
+    ]
+    shape = tuple(header["shape"])
+    dtype = np.dtype(header["dtype"])
+    if not parts:
+        return np.zeros(shape, dtype)
+    if parts[0].ndim == 0 or not shape:
+        out = np.concatenate([np.atleast_1d(p) for p in parts])
+        return out.astype(dtype).reshape(shape)
+    return np.concatenate(parts, axis=0).astype(dtype).reshape(shape)
+
+
+def decompress_chunk(blob: bytes, index: int) -> np.ndarray:
+    """Random access: decode only chunk ``index`` of a v2 container."""
+    header, body_off = pl_mod.parse_header(blob)
+    if header.get("v", 1) < _VERSION2 or header.get("kind") != "chunked":
+        raise ValueError("not a chunked (v2) container")
+    c = header["chunks"][index]
+    return pl_mod.decompress(
+        blob[body_off + c["off"] : body_off + c["off"] + c["len"]]
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming API (bounded memory)
+# ---------------------------------------------------------------------------
+
+def compress_stream(
+    data: Union[np.ndarray, Iterable[np.ndarray]],
+    conf: Optional[CompressionConfig] = None,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    chunk_bytes: int = 1 << 22,
+) -> Iterator[bytes]:
+    """Yield a prologue frame, then one self-describing v1 blob per chunk.
+
+    ``data`` may be an ndarray (re-chunked by byte budget, bound resolved
+    globally — the stream then reassembles bit-identically into the one-shot
+    v2 container via :func:`frames_to_blob`) or an iterable of slabs (each
+    slab is chunked independently as it arrives; REL bounds resolve per slab).
+    """
+    conf = conf or CompressionConfig()
+    eng = ChunkedCompressor(candidates=candidates, chunk_bytes=chunk_bytes, conf=conf)
+    prologue = _STREAM_MAGIC + msgpack.packb(
+        {"v": _VERSION2, "axis": 0, "mode": conf.mode.value, "eb": float(conf.eb)},
+        use_bin_type=True,
+    )
+    yield prologue
+    slabs = [data] if isinstance(data, np.ndarray) else data
+    for slab in slabs:
+        for blob, _name, _n0 in eng._chunk_frames(np.asarray(slab), conf):
+            yield blob
+
+
+def decompress_stream(frames: Iterable[bytes]) -> Iterator[np.ndarray]:
+    """Inverse of :func:`compress_stream`: yield one decoded array per chunk.
+
+    Tolerates a missing prologue (a bare sequence of v1/v2 blobs works too);
+    memory stays bounded by one chunk at a time.
+    """
+    for frame in frames:
+        if frame[:4] == _STREAM_MAGIC:
+            continue
+        yield pl_mod.decompress(frame)
+
+
+def frames_to_blob(frames: Iterable[bytes]) -> bytes:
+    """Assemble a frame stream into the one-shot v2 container.
+
+    Only compressed blobs are held; raw data is never materialized.  The
+    result is byte-identical to ``ChunkedCompressor.compress(x).blob`` when
+    the stream came from the same array/config with the DEFAULT candidate
+    set; exotic candidates whose factory cannot be recovered from a blob's
+    spec (e.g. ``sz3_aps``, which emits a composite/lorenzo spec) decode
+    identically but may name the winner differently in the chunk table.
+    Frames carry no rank information, so a 0-d input reassembles (and
+    decodes) as shape ``(1,)``; use the one-shot container for scalars.
+    """
+    records: List[ChunkRecord] = []
+    parts: List[bytes] = []
+    off = 0
+    mode, eb = ErrorBoundMode.ABS.value, None
+    shape0 = 0
+    inner: Optional[Tuple[int, ...]] = None
+    dtype = np.dtype(np.float32)
+    for frame in frames:
+        if frame[:4] == _STREAM_MAGIC:
+            meta = msgpack.unpackb(frame[4:], raw=False)
+            mode = meta.get("mode", mode)
+            if meta.get("eb") is not None:
+                eb = float(meta["eb"])
+            continue
+        h, _ = pl_mod.parse_header(frame)
+        cshape = tuple(h["shape"])
+        n0 = int(cshape[0]) if cshape else 1
+        if inner is None:
+            inner = cshape[1:]
+            dtype = np.dtype(h["dtype"])
+        elif cshape[1:] != inner:
+            raise ValueError(
+                f"inconsistent chunk shapes in stream: {cshape[1:]} vs {inner}"
+            )
+        records.append(ChunkRecord(off, len(frame), n0, _pipeline_name_from_spec(h["spec"])))
+        parts.append(frame)
+        off += len(frame)
+        shape0 += n0
+    conf = CompressionConfig(mode=ErrorBoundMode(mode), eb=1e-3 if eb is None else eb)
+    return _assemble_v2((shape0,) + (inner or ()), dtype, records, parts, conf)
+
+
+def _pipeline_name_from_spec(spec: Dict[str, Any]) -> str:
+    """Recover the factory name a v1 blob was produced by (best effort)."""
+    if spec.get("kind") == "truncation":
+        return "sz3_truncation"
+    pred = spec.get("predictor")
+    if pred == "composite":
+        return "sz3_lr"
+    if pred == "interp":
+        return "sz3_interp"
+    if pred == "lorenzo":
+        return "sz3_lorenzo"
+    if pred == "pattern":
+        if spec.get("quantizer") == "unpred_aware":
+            return "sz3_pastri"
+        return "sz_pastri" if spec.get("lossless") == "none" else "sz_pastri_zstd"
+    return str(spec.get("kind", "sz3"))
+
+
+def write_frames(frames: Iterable[bytes], fp) -> int:
+    """Length-prefix frames onto a binary file object; returns bytes written."""
+    total = 0
+    for frame in frames:
+        fp.write(np.asarray([len(frame)], np.int64).tobytes())
+        fp.write(frame)
+        total += 8 + len(frame)
+    return total
+
+
+def read_frames(fp) -> Iterator[bytes]:
+    """Inverse of :func:`write_frames`."""
+    while True:
+        head = fp.read(8)
+        if len(head) < 8:
+            return
+        (n,) = np.frombuffer(head, np.int64)
+        frame = fp.read(int(n))
+        if len(frame) != int(n):
+            raise ValueError("truncated frame stream")
+        yield frame
+
+
+def sz3_chunked(
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    chunk_bytes: int = 1 << 22,
+    **kw,
+) -> ChunkedCompressor:
+    """Named factory, registered alongside the paper pipelines."""
+    return ChunkedCompressor(candidates=candidates, chunk_bytes=chunk_bytes, **kw)
+
+
+# register with the named-pipeline table (PIPELINES lives in pipeline.py;
+# chunking imports pipeline, so registration happens here to avoid a cycle)
+pl_mod.PIPELINES["sz3_chunked"] = sz3_chunked

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import abc
 import lzma
+import warnings
 import zlib
 from typing import Dict, Type
 
@@ -16,8 +17,24 @@ try:
     import zstandard as _zstd
 
     _HAVE_ZSTD = True
-except Exception:  # pragma: no cover - zstandard is installed in this env
+except Exception:  # pragma: no cover - exercised where zstandard is absent
+    _zstd = None
     _HAVE_ZSTD = False
+
+_warned_no_zstd = False
+
+
+def _warn_no_zstd() -> None:
+    global _warned_no_zstd
+    if not _warned_no_zstd:
+        warnings.warn(
+            "zstandard is not installed; the 'zstd' lossless backend falls "
+            "back to zlib (containers will record lossless='gzip'). Install "
+            "the [test] extra for the full environment.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        _warned_no_zstd = True
 
 
 class LosslessBackend(abc.ABC):
@@ -45,19 +62,37 @@ class Passthrough(LosslessBackend):
 
 
 class Zstd(LosslessBackend):
+    """zstd when available; degrades to zlib (with a one-time warning) so
+    environments without ``zstandard`` still import, compress, and round-trip.
+    The instance reports ``name='gzip'`` in fallback mode, keeping containers
+    self-describing: blobs written by a fallback instance decode anywhere."""
+
     name = "zstd"
 
     def __init__(self, level: int = 3):
-        if not _HAVE_ZSTD:
-            raise RuntimeError("zstandard not available")
         self.level = level
-        self._c = _zstd.ZstdCompressor(level=level)
-        self._d = _zstd.ZstdDecompressor()
+        if _HAVE_ZSTD:
+            self._c = _zstd.ZstdCompressor(level=level)
+            self._d = _zstd.ZstdDecompressor()
+        else:
+            _warn_no_zstd()
+            self.name = "gzip"  # shadow the class attr: spec stays truthful
+            self._c = self._d = None
 
     def compress(self, data: bytes) -> bytes:
+        if self._c is None:
+            return zlib.compress(data, min(9, max(1, self.level)))
         return self._c.compress(data)
 
     def decompress(self, data: bytes) -> bytes:
+        if self._d is None:
+            try:
+                return zlib.decompress(data)
+            except zlib.error as e:
+                raise RuntimeError(
+                    "cannot decompress this blob: it was written with zstd "
+                    "but zstandard is not installed in this environment"
+                ) from e
         return self._d.decompress(data)
 
 

@@ -15,6 +15,8 @@ so ``decompress(blob)`` rebuilds the exact pipeline.  Named factory pipelines:
   sz_pastri       — pattern + linear quant + fixed Huffman (no lossless)            (baseline [19])
   sz3_aps         — error-bound-adaptive APS pipeline                               (paper §5)
   sz3_lorenzo     — pure dual-quant Lorenzo (TPU-native fast path)
+  sz3_chunked     — streaming chunked engine, per-chunk pipeline selection
+                    (registered by chunking.py; emits the v2 container)
 """
 from __future__ import annotations
 
@@ -48,6 +50,20 @@ def _clean_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
         else:
             out[k] = v
     return out
+
+
+def pack_container(header: Dict[str, Any], body: bytes) -> bytes:
+    """The container wire format: magic + int64 (header, body) lengths +
+    msgpack header + body.  Single authority — every writer (v1 pipelines,
+    truncation, v2 chunked) must frame through here so readers stay
+    compatible."""
+    hbytes = msgpack.packb(header, use_bin_type=True)
+    return (
+        _MAGIC
+        + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
+        + hbytes
+        + body
+    )
 
 
 @dataclasses.dataclass
@@ -138,14 +154,8 @@ class SZ3Compressor:
             "pre_meta": _clean_meta(pre_meta),
             "pred_meta": _clean_meta(pred_meta),
         }
-        hbytes = msgpack.packb(header, use_bin_type=True)
         body = self.lossless.compress(enc_bytes + q_bytes)  # line 11
-        blob = (
-            _MAGIC
-            + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
-            + hbytes
-            + body
-        )
+        blob = pack_container(header, body)
         ratio = data.nbytes / max(1, len(blob))
         return CompressionResult(
             blob=blob,
@@ -165,8 +175,16 @@ def parse_header(blob: bytes) -> Tuple[Dict[str, Any], int]:
 
 
 def decompress(blob: bytes) -> np.ndarray:
-    """Self-describing decompression — rebuilds the pipeline from the header."""
+    """Self-describing decompression — rebuilds the pipeline from the header.
+
+    Handles both container generations: v1 single-pipeline blobs and v2
+    multi-chunk blobs (per-chunk spec + offsets; see chunking.py).
+    """
     header, body_off = parse_header(blob)
+    if header.get("v", _VERSION) >= 2 and header.get("kind") == "chunked":
+        from .chunking import decompress_chunked  # local: avoids import cycle
+
+        return decompress_chunked(blob, header, body_off)
     spec = header["spec"]
     if spec["kind"] == "truncation":
         return TruncationCompressor._decompress_body(blob, header, body_off)
@@ -224,13 +242,7 @@ class TruncationCompressor:
             "shape": list(data.shape),
             "dtype": data.dtype.str,
         }
-        hbytes = msgpack.packb(header, use_bin_type=True)
-        blob = (
-            _MAGIC
-            + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
-            + hbytes
-            + body
-        )
+        blob = pack_container(header, body)
         return CompressionResult(blob=blob, ratio=data.nbytes / max(1, len(blob)))
 
     @staticmethod

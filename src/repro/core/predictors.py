@@ -67,6 +67,147 @@ def lorenzo_inverse(d: np.ndarray, order: int = 1) -> np.ndarray:
     return q
 
 
+def code_bits(
+    abs_errors: np.ndarray, abs_eb: float, radius: int = 32768
+) -> float:
+    """Mean estimated coded bits/element for given |prediction errors|.
+
+    Errors become quantization-bin indices (e/(2*eb)); the entropy stage pays
+    the empirical entropy of that bin population, and out-of-range points are
+    stored raw (~64 bits).  This is the common currency the chunked engine
+    contests whole pipelines in — mean |error| (the composite predictor's
+    intra-pipeline criterion) cannot see that e.g. an all-zeros bin population
+    costs almost nothing, and over-weights a few unpredictable outliers.
+    """
+    e = np.asarray(abs_errors, np.float64).reshape(-1)
+    if e.size == 0:
+        return 0.0
+    return _int_code_bits(np.rint(e / (2.0 * abs_eb)), radius)
+
+
+def _int_code_bits(q: np.ndarray, radius: int) -> float:
+    """Entropy of integer bin indices + raw-storage cost of out-of-range ones."""
+    q = np.abs(np.asarray(q).reshape(-1))
+    if q.size == 0:
+        return 0.0
+    out = q >= radius
+    inr = q[~out]
+    bits = 64.0 * float(out.mean())
+    if inr.size:
+        _, counts = np.unique(inr, return_counts=True)
+        p = counts / inr.size
+        bits += float(-(p * np.log2(p)).sum()) * float((~out).mean())
+    return bits
+
+
+def lorenzo_residuals(
+    sample: np.ndarray, abs_eb: float, order: int = 1, radius: int = 32768
+) -> np.ndarray:
+    """|Lorenzo prediction error| per sample point (paper: estimate_error).
+
+    Same statistic the composite predictor scores Lorenzo blocks with: the
+    magnitude of the prequantized stencil output, clipped at the code range.
+    """
+    x64 = np.asarray(sample, np.float64)
+    if x64.size == 0:
+        return np.zeros(0)
+    q = np.rint(x64 / (2.0 * abs_eb))
+    d = lorenzo_filter(q, order)
+    est = np.abs(d) * (2.0 * abs_eb)
+    return np.minimum(est, 2.0 * abs_eb * radius)
+
+
+def regression_residuals(
+    sample: np.ndarray, abs_eb: float, block_size: int
+) -> np.ndarray:
+    """|hyperplane-fit residual| per sample point, block-wise as in SZ2."""
+    res, _ = _regression_fit(sample, block_size)
+    return res
+
+
+def _regression_fit(
+    sample: np.ndarray, block_size: int
+) -> Tuple[np.ndarray, List[np.ndarray]]:
+    """(per-point |residual|, per-stream coefficient values) of the SZ2 fit."""
+    b = max(2, int(block_size))
+    x = np.asarray(sample, np.float64)
+    if x.size == 0:
+        return np.zeros(0), []
+    if x.ndim == 0:
+        x = x.reshape(1)
+    nd = x.ndim
+    reg = RegressionPredictor()
+    xp, _ = reg._pad(x, b)
+    blocks = reg._blockify(xp, b)
+    axes = tuple(range(1, nd + 1))
+    cs = reg._coords(b, nd)
+    denom = (b**nd) * ((b * b - 1) / 12.0)
+    coeffs = [blocks.mean(axis=axes)]
+    pred = coeffs[0].reshape((-1,) + (1,) * nd)
+    for k in range(nd):
+        beta = (blocks * cs[k]).sum(axis=axes) / denom
+        coeffs.append(beta)
+        pred = pred + beta.reshape((-1,) + (1,) * nd) * cs[k]
+    return np.abs(blocks - pred).reshape(-1), coeffs
+
+
+def regression_bits(
+    sample: np.ndarray, abs_eb: float, block_size: int, radius: int = 32768
+) -> float:
+    """Estimated bits/element for the SZ2 regression stage INCLUDING the
+    quantized, delta-coded coefficient streams — on small blocks the
+    coefficients are a material share of the coded payload, so ranking
+    regression by residuals alone flatters it."""
+    b = max(2, int(block_size))
+    res, coeffs = _regression_fit(sample, block_size)
+    if res.size == 0:
+        return 0.0
+    bits = code_bits(res, abs_eb, radius)
+    n = res.size
+    for k, vals in enumerate(coeffs):
+        ceb = abs_eb / 2.0 if k == 0 else abs_eb / (2.0 * b)
+        q = np.rint(vals / (2.0 * ceb))
+        bits += _int_code_bits(np.diff(q, prepend=0), radius) * vals.size / n
+    return bits
+
+
+def interp_residuals(sample: np.ndarray) -> np.ndarray:
+    """|linear-interpolation residual| pooled over ALL levels, per axis.
+
+    Mirrors the interpolation predictor's code population: each point is
+    predicted once, at the level that fills it — fine levels are cheap on
+    smooth data but coarse levels pay near-full amplitude, which a
+    finest-level-only estimate would hide (and then mis-rank the pipeline on
+    e.g. periodic data whose period exceeds the fine strides).
+    """
+    x = np.asarray(sample, np.float64)
+    if x.size == 0:
+        return np.zeros(0)
+    errs = []
+    for ax in range(x.ndim):
+        dim = x.shape[ax]
+        if dim < 3:
+            continue
+        s = 1
+        while s < dim:
+            mid = [slice(None)] * x.ndim
+            left = [slice(None)] * x.ndim
+            right = [slice(None)] * x.ndim
+            mid[ax] = slice(s, None, 2 * s)
+            n_mid = len(range(s, dim, 2 * s))
+            left[ax] = slice(0, 2 * s * n_mid, 2 * s)
+            right_idx = np.minimum(np.arange(n_mid) * 2 * s + 2 * s, dim - 1)
+            xl = x[tuple(left)]
+            xr = np.take(x, right_idx, axis=ax)
+            pred = 0.5 * (xl + xr)
+            errs.append(np.abs(x[tuple(mid)] - pred).reshape(-1))
+            s *= 2
+    if not errs:
+        flat = x.reshape(-1)
+        return np.abs(np.diff(flat, prepend=0.0))
+    return np.concatenate(errs)
+
+
 def _pack_mask(mask: np.ndarray) -> bytes:
     return np.packbits(mask.reshape(-1)).tobytes()
 
@@ -77,6 +218,20 @@ def _unpack_mask(buf: bytes, n: int) -> np.ndarray:
 
 class Predictor(abc.ABC):
     name: str = "abstract"
+
+    def estimate_error(
+        self, sample: np.ndarray, abs_eb: float, conf: CompressionConfig
+    ) -> Optional[float]:
+        """Estimated entropy-coded bits/element this predictor would incur.
+
+        The paper's ``estimate_error`` (§3.2), lifted from the composite
+        predictor's block-wise Lorenzo-vs-regression contest to a first-class
+        predictor capability so *whole pipelines* can be contested per data
+        region (chunking.py).  Scores are comparable across predictors (see
+        :func:`code_bits`).  ``None`` means "no cheap estimator" — callers
+        fall back to trial compression of the sample.
+        """
+        return None
 
     @abc.abstractmethod
     def compress(
@@ -103,6 +258,11 @@ class Predictor(abc.ABC):
 class ZeroPredictor(Predictor):
     name = "zero"
 
+    def estimate_error(self, sample, abs_eb, conf):
+        return code_bits(
+            np.abs(np.asarray(sample, np.float64)), abs_eb, conf.quant_radius
+        )
+
     def compress(self, data, quantizer, conf):
         codes, _ = quantizer.quantize(data.reshape(-1), np.zeros(data.size))
         return codes, {}
@@ -123,6 +283,15 @@ class LorenzoPredictor(Predictor):
 
     def __init__(self, order: Optional[int] = None):
         self.order = order
+
+    def estimate_error(self, sample, abs_eb, conf):
+        return code_bits(
+            lorenzo_residuals(
+                sample, abs_eb, self.order or conf.lorenzo_order, conf.quant_radius
+            ),
+            abs_eb,
+            conf.quant_radius,
+        )
 
     def compress(self, data, quantizer, conf):
         order = self.order or conf.lorenzo_order
@@ -167,6 +336,14 @@ class LorenzoSequentialPredictor(Predictor):
     """
 
     name = "lorenzo_seq"
+
+    def estimate_error(self, sample, abs_eb, conf):
+        # same stencil statistics as the parallel dual-quant variant
+        return code_bits(
+            lorenzo_residuals(sample, abs_eb, 1, conf.quant_radius),
+            abs_eb,
+            conf.quant_radius,
+        )
 
     @staticmethod
     def _stencil(shape: Tuple[int, ...]):
@@ -322,6 +499,9 @@ class RegressionPredictor(Predictor):
 
     name = "regression"
 
+    def estimate_error(self, sample, abs_eb, conf):
+        return regression_bits(sample, abs_eb, conf.block_size, conf.quant_radius)
+
     def _pad(self, data: np.ndarray, b: int) -> Tuple[np.ndarray, Tuple[int, ...]]:
         pads = [(0, (-s) % b) for s in data.shape]
         return np.pad(data, pads, mode="edge"), data.shape
@@ -438,6 +618,9 @@ class InterpolationPredictor(Predictor):
 
     def __init__(self, kind: Optional[str] = None):
         self.kind = kind
+
+    def estimate_error(self, sample, abs_eb, conf):
+        return code_bits(interp_residuals(sample), abs_eb, conf.quant_radius)
 
     # -- pass geometry -------------------------------------------------------
     def _passes(self, shape: Tuple[int, ...]):
@@ -644,6 +827,19 @@ class CompositePredictor(Predictor):
     """
 
     name = "composite"
+
+    def estimate_error(self, sample, abs_eb, conf):
+        # best-of its two candidates, mirroring the block-wise contest below,
+        # plus the 1-bit-per-block selection flag it must also code
+        flag_bits = 1.0 / float(max(2, conf.block_size)) ** max(1, sample.ndim)
+        return flag_bits + min(
+            code_bits(
+                lorenzo_residuals(sample, abs_eb, 1, conf.quant_radius),
+                abs_eb,
+                conf.quant_radius,
+            ),
+            regression_bits(sample, abs_eb, conf.block_size, conf.quant_radius),
+        )
 
     def compress(self, data, quantizer, conf):
         b = int(conf.block_size)

@@ -33,12 +33,17 @@ import jax
 import numpy as np
 
 from ..core import (
+    ChunkedCompressor,
     CompressionConfig,
     ErrorBoundMode,
     decompress as sz3_decompress,
     sz3_lorenzo,
 )
-from ..core.lossless import Zstd
+from ..core.lossless import Zstd, make as make_lossless
+
+# leaves at/above this size go through the chunked engine (bounded working
+# memory per chunk + per-chunk pipeline selection) instead of one-shot Lorenzo
+_CHUNKED_MIN_BYTES = 1 << 22
 
 
 # ---------------------------------------------------------------------------
@@ -101,17 +106,23 @@ def encode_leaf(arr: np.ndarray, pol: LeafPolicy) -> Tuple[bytes, Dict[str, Any]
         and np.isfinite(arr).all()
         and float(arr.max() - arr.min()) > 0
     ):
-        comp = sz3_lorenzo()
         flat2d = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
+        if arr.nbytes >= _CHUNKED_MIN_BYTES:
+            comp = ChunkedCompressor(candidates=("sz3_lorenzo", "sz3_lr"))
+            meta["codec"] = "sz3_chunked_rel"
+        else:
+            comp = sz3_lorenzo()
+            meta["codec"] = "sz3_lorenzo_rel"
         res = comp.compress(np.ascontiguousarray(flat2d), conf)
-        meta["codec"] = "sz3_lorenzo_rel"
         return res.blob, meta
     if pol.mode == "raw":
         meta["codec"] = "raw"
         return arr.tobytes(), meta
     raw = _byteshuffle(arr.tobytes(), arr.dtype.itemsize)
-    meta["codec"] = "shuffle_zstd"
+    # record the ACTUAL backend (the Zstd class degrades to 'gzip' when
+    # zstandard is missing) so restore picks the right decompressor anywhere
+    meta["codec"] = f"shuffle_{_zstd.name}"
     return _zstd.compress(raw), meta
 
 
@@ -119,13 +130,16 @@ def decode_leaf(blob: bytes, meta: Dict[str, Any]) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
     codec = meta["codec"]
-    if codec == "sz3_lorenzo_rel":
+    if codec in ("sz3_lorenzo_rel", "sz3_chunked_rel"):
+        # both are self-describing SZ3 containers (v1 / v2 multi-chunk)
         arr = sz3_decompress(blob)
         return arr.reshape(shape).astype(dtype)
     if codec == "raw":
         return np.frombuffer(blob, dtype).reshape(shape).copy()
     nbytes = int(np.prod(shape)) * dtype.itemsize if shape else dtype.itemsize
-    raw = _byteunshuffle(_zstd.decompress(blob), dtype.itemsize, nbytes)
+    lname = codec.split("_", 1)[1] if codec.startswith("shuffle_") else "zstd"
+    backend = _zstd if lname == _zstd.name else make_lossless(lname)
+    raw = _byteunshuffle(backend.decompress(blob), dtype.itemsize, nbytes)
     return np.frombuffer(raw, dtype, count=int(np.prod(shape)) if shape else 1).reshape(shape).copy()
 
 

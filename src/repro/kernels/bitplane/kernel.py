@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 
 def _encode_kernel(v_ref, w_ref):
     v = v_ref[...]  # (bt, 32) uint32
@@ -39,9 +41,7 @@ def encode(v, *, bt=512, interpret=True):
         grid=(R // bt,),
         in_specs=[pl.BlockSpec((bt, 32), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((32, bt), lambda i: (0, i)),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)
-        ),
+        compiler_params=tpu_compiler_params(("parallel",)),
         interpret=interpret,
     )(v)
 
@@ -54,8 +54,6 @@ def decode(w, *, bt=512, interpret=True):
         grid=(R // bt,),
         in_specs=[pl.BlockSpec((32, bt), lambda i: (0, i))],
         out_specs=pl.BlockSpec((bt, 32), lambda i: (i, 0)),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)
-        ),
+        compiler_params=tpu_compiler_params(("parallel",)),
         interpret=interpret,
     )(w)

@@ -1,0 +1,45 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+The Mosaic compiler-params class was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``).  Kernels go through
+this shim so they compile against either name; when neither exists (very old
+or stripped-down JAX builds) ``tpu_compiler_params`` returns ``None``, which
+``pallas_call`` accepts as "no TPU-specific options" — fine for the
+interpret-mode CPU path used in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+
+    _PARAMS_CLS = getattr(
+        _pltpu, "CompilerParams", getattr(_pltpu, "TPUCompilerParams", None)
+    )
+    HAS_PALLAS_TPU = True
+except Exception:  # pragma: no cover - pallas missing entirely
+    _pltpu = None
+    _PARAMS_CLS = None
+    HAS_PALLAS_TPU = False
+
+HAS_COMPILER_PARAMS = _PARAMS_CLS is not None
+
+
+def tpu_compiler_params(dimension_semantics: Sequence[str]) -> Optional[object]:
+    """Build TPU compiler params naming grid-dimension semantics, if supported."""
+    if _PARAMS_CLS is None:
+        return None
+    return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
+
+
+def pallas_unavailable_reason() -> Optional[str]:
+    """Human-readable reason the Pallas TPU kernels cannot be used, or None."""
+    if not HAS_PALLAS_TPU:
+        return "jax.experimental.pallas.tpu is not importable in this JAX build"
+    if not HAS_COMPILER_PARAMS:
+        return (
+            "installed JAX lacks pltpu.CompilerParams/TPUCompilerParams; "
+            "Pallas kernels are version-gated off"
+        )
+    return None

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 SCALE_FLOOR = 1e-8
 
 
@@ -60,7 +62,7 @@ def absmax(x, *, bm=256, interpret=True):
         in_specs=[pl.BlockSpec((bm, C), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, C), lambda i: (0, 0)),
         scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(x)
 
@@ -76,9 +78,7 @@ def quantize_with_scale(x, scale, *, bm=256, bn=128, interpret=True):
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel")),
         interpret=interpret,
     )(x, scale)
 
@@ -119,8 +119,6 @@ def dequant_matmul(a, q, scale, *, bm=128, bn=128, bk=128, interpret=True):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, q, scale)

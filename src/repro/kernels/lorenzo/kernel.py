@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 
 # ---------------------------------------------------------------------------
 # encode
@@ -98,8 +100,8 @@ def _decode2d_kernel(d_ref, out_ref, carry_ref, *, two_eb):
 # pallas_call wrappers (shapes must be pre-padded by ops.py)
 # ---------------------------------------------------------------------------
 
-_SEQ = pltpu.CompilerParams(dimension_semantics=("arbitrary", "arbitrary"))
-_SEQ1 = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+_SEQ = tpu_compiler_params(("arbitrary", "arbitrary"))
+_SEQ1 = tpu_compiler_params(("arbitrary",))
 
 
 def encode_1d(x, eb, radius, *, bm=256, bn=512, interpret=True):

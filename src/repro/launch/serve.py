@@ -1,7 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --kv int8``.
 
 Batched greedy decode with the (optionally int8-quantized) KV cache —
-the paper's quantizer on the serving path.
+the paper's quantizer on the serving path.  ``--offload-kv chunked``
+additionally streams the finished cache through the chunked compression
+engine (repro.core.chunking) frame by frame — the bounded-memory offload
+path for evicting sequences to host/disk under heavy traffic.
 """
 from __future__ import annotations
 
@@ -23,6 +26,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--kv", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--offload-kv", default="none", choices=["none", "chunked"])
+    ap.add_argument("--offload-eb", type=float, default=1e-3)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -51,6 +56,39 @@ def main():
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
+    if args.offload_kv == "chunked":
+        offload_cache(cache, eb=args.offload_eb)
+
+
+def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20):
+    """Stream every float cache leaf through the chunked engine; report totals.
+
+    Frames are produced (and could be written to host/disk) one chunk at a
+    time — working memory stays bounded by one chunk regardless of cache size.
+    """
+    from repro.core import CompressionConfig, ErrorBoundMode
+    from repro.core.chunking import compress_stream
+
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=eb)
+    n_in = n_out = n_leaves = 0
+    t0 = time.perf_counter()
+    for leaf in jax.tree.leaves(cache):
+        dt = getattr(leaf, "dtype", None)
+        # jnp.issubdtype, not numpy dtype.kind: bfloat16 is kind 'V' to numpy
+        if dt is None or not jnp.issubdtype(dt, jnp.floating) or leaf.size < 1024:
+            continue
+        a = np.asarray(jnp.asarray(leaf, jnp.float32))
+        arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
+        for frame in compress_stream(arr, conf, chunk_bytes=chunk_bytes):
+            n_out += len(frame)
+        n_in += arr.nbytes
+        n_leaves += 1
+    dt = time.perf_counter() - t0
+    print(
+        f"kv offload (chunked stream, rel eb={eb:g}): {n_leaves} leaves, "
+        f"{n_in / max(1, n_out):.2f}x ratio, {n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
+    )
+    return n_in, n_out
 
 
 if __name__ == "__main__":

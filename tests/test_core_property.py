@@ -6,6 +6,12 @@
   * dual-quant Lorenzo and the sequential oracle both respect the bound.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — `pip install -e .[test]` for the full suite",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -110,3 +116,28 @@ def test_sequential_vs_dualquant_both_bounded(x, eb):
         res = comp.compress(x, CompressionConfig(eb=eb))
         xhat = decompress(res.blob)
         assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6), type(pred).__name__
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    x=arrays(max_elems=4000),
+    eb=st.sampled_from([1e-1, 1e-3]),
+    n_chunks=st.integers(2, 6),
+)
+def test_streaming_equals_one_shot(x, eb, n_chunks):
+    """The frame stream reassembles into the EXACT one-shot v2 container and
+    decodes to the exact same array (chunked engine invariant)."""
+    from repro.core import ChunkedCompressor, compress_stream, decompress_stream
+    from repro.core.chunking import frames_to_blob
+
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb)
+    cb = max(1, x.nbytes // n_chunks)
+    res = ChunkedCompressor(chunk_bytes=cb).compress(x, conf)
+    frames = list(compress_stream(x, conf, chunk_bytes=cb))
+    assert frames_to_blob(frames) == res.blob
+    one_shot = decompress(res.blob)
+    streamed = np.concatenate(
+        [np.atleast_1d(p) for p in decompress_stream(frames)]
+    ).reshape(x.shape)
+    assert np.array_equal(streamed.astype(np.float64), one_shot.astype(np.float64))
+    assert metrics.max_abs_error(x, one_shot) <= eb * (1 + 1e-6)
