@@ -3,10 +3,21 @@
 Includes the device-kernel path (dual-quant Lorenzo via the Pallas ops in
 interpret mode on CPU; compiled on real TPUs) alongside the host pipelines,
 which is this repo's analogue of the paper's SZ3-LR-s speed-oriented build.
+
+PR2 additions (``perf_rows``): before/after rows for the word-packed Huffman
+codec (v2 vs the retained legacy implementation, same data) and for the
+parallel chunked engine (workers=1/2/4, plus the combined delta vs the
+PR1-equivalent serial+legacy configuration).  ``main`` writes the combined
+result to a ``BENCH_*.json`` at the repo root so the perf trajectory is
+recorded per change; ``benchmarks/check_regression.py`` diffs the relative
+speedups against the committed ``BENCH_baseline.json`` in CI.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -14,14 +25,111 @@ from repro.core import (
     CompressionConfig,
     ErrorBoundMode,
     decompress,
+    encoders,
+    lossless,
     sz3_chunked,
     sz3_interp,
     sz3_lorenzo,
     sz3_lr,
     sz3_truncation,
 )
+from repro.core.chunking import ChunkedCompressor
 
 from . import datasets
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _best(fn, repeats=2):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def huffman_rows(full: bool = False, seed: int = 3):
+    """Huffman encode+decode, v2 word-packed vs legacy, same code stream.
+
+    The code stream is what a 16M-element (quick: 4M) float32 smooth field
+    feeds the entropy stage: two-sided-geometric quantization codes around
+    the zero bin plus sparse unpredictable markers.
+    """
+    n = (1 << 24) if full else (1 << 22)
+    rng = np.random.default_rng(seed)
+    codes = (32768 + np.rint(rng.standard_normal(n) * 2.5)).astype(np.uint16)
+    codes[rng.random(n) < 0.001] = 0
+    src_mb = n * 4 / 1e6  # of the float32 array the codes stand for
+
+    v2 = encoders.HuffmanEncoder()
+    legacy = encoders.LegacyHuffmanEncoder()
+    t_enc, blob = _best(lambda: v2.encode(codes))
+    t_dec, out = _best(lambda: v2.decode(blob, n))
+    assert np.array_equal(out, codes.astype(np.int64))
+    t_lenc, lblob = _best(lambda: legacy.encode(codes), repeats=1)
+    t_ldec, lout = _best(lambda: legacy.decode(lblob, n), repeats=1)
+    assert np.array_equal(lout, codes.astype(np.int64))
+    return {
+        "n_codes": n,
+        "src_float32_MB": round(src_mb, 1),
+        "enc_MBps_v2": round(src_mb / t_enc, 1),
+        "dec_MBps_v2": round(src_mb / t_dec, 1),
+        "enc_MBps_legacy": round(src_mb / t_lenc, 1),
+        "dec_MBps_legacy": round(src_mb / t_ldec, 1),
+        "speedup_enc": round(t_lenc / t_enc, 2),
+        "speedup_dec": round(t_ldec / t_dec, 2),
+        "speedup_encdec": round((t_lenc + t_ldec) / (t_enc + t_dec), 2),
+    }
+
+
+def chunked_rows(full: bool = False, seed: int = 3):
+    """End-to-end chunked compress/decompress at several worker counts, plus
+    the PR1-equivalent configuration (serial, legacy Huffman) on both."""
+    shape = (512, 256, 128) if full else (256, 256, 64)  # 64MB / 16MB f32
+    rng = np.random.default_rng(seed)
+    data = np.cumsum(rng.standard_normal(shape).astype(np.float32), axis=0)
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+    mb = data.nbytes / 1e6
+    out = {"data_MB": round(mb, 1), "cpu_count": os.cpu_count()}
+    blob = None
+    times = {}
+    for w in (1, 2, 4):
+        eng = ChunkedCompressor(chunk_bytes=1 << 22, workers=w)
+        dt, res = _best(lambda: eng.compress(data, conf))
+        times[w] = dt
+        out[f"compress_MBps_w{w}"] = round(mb / dt, 1)
+        if blob is None:
+            blob = res.blob
+        else:
+            assert res.blob == blob, "parallel container not byte-identical"
+    out["speedup_w4_vs_w1"] = round(times[1] / times[4], 2)
+    out["speedup_w2_vs_w1"] = round(times[1] / times[2], 2)
+    for w in (1, 4):
+        dt, _ = _best(lambda: decompress(blob, workers=w))
+        out[f"decompress_MBps_w{w}"] = round(mb / dt, 1)
+    # PR1-equivalent engine: serial + legacy Huffman swapped in for the
+    # factories' default encoder (restored afterwards)
+    v2_cls = encoders.HuffmanEncoder
+    try:
+        encoders.HuffmanEncoder = encoders.LegacyHuffmanEncoder
+        eng = ChunkedCompressor(chunk_bytes=1 << 22, workers=1)
+        dt_pr1, _ = _best(lambda: eng.compress(data, conf), repeats=1)
+    finally:
+        encoders.HuffmanEncoder = v2_cls
+    out["compress_MBps_pr1_equiv"] = round(mb / dt_pr1, 1)
+    out["speedup_w4_vs_pr1"] = round(dt_pr1 / times[4], 2)
+    return out
+
+
+def perf_rows(full: bool = False):
+    return {
+        "lossless_backend": lossless.effective_backend("zstd"),
+        "cpu_count": os.cpu_count(),
+        "huffman": huffman_rows(full),
+        "chunked_workers": chunked_rows(full),
+    }
 
 
 def run(fields=None, seed: int = 3, repeats: int = 1):
@@ -57,15 +165,44 @@ def run(fields=None, seed: int = 3, repeats: int = 1):
     return rows
 
 
-def main(full: bool = False):
+def write_bench_json(perf, tag: str = "latest") -> str:
+    """Record the perf trajectory at the repo root (acceptance artifact)."""
+    path = REPO_ROOT / f"BENCH_{tag}.json"
+    with open(path, "w") as f:
+        json.dump(perf, f, indent=1, default=str)
+    return str(path)
+
+
+def perf_main(full: bool = False, tag: str = None):
+    """Perf rows only (codec + engine before/after) + BENCH json artifact.
+
+    The CI regression gate runs this — it skips the Fig-8 field matrix the
+    gate never reads.
+    """
+    perf = perf_rows(full)
+    print("perf:", json.dumps(perf))
+    path = write_bench_json(
+        {"perf": perf}, tag or ("full" if full else "quick")
+    )
+    print(f"wrote {path}")
+    return perf
+
+
+def main(full: bool = False, write_json: bool = False):
     rows = run(list(datasets.DOMAIN_FIELDS) if full else None)
     print("field,pipeline,ratio,compress_MBps,decompress_MBps")
     for r in rows:
         print(
             f"{r['field']},{r['pipeline']},{r['ratio']},{r['compress_MBps']},{r['decompress_MBps']}"
         )
-    return rows
+    perf = perf_rows(full)
+    print("perf:", json.dumps(perf))
+    out = {"pipelines": rows, "perf": perf}
+    if write_json:  # registry runs (benchmarks.run) must stay side-effect free
+        path = write_bench_json(out, "full" if full else "quick")
+        print(f"wrote {path}")
+    return out
 
 
 if __name__ == "__main__":
-    main(True)
+    main(True, write_json=True)

@@ -1,0 +1,94 @@
+"""CI throughput-regression gate.
+
+Compares a fresh ``BENCH_*.json`` (written by ``benchmarks.run --json`` /
+``bench_throughput.main``) against the committed ``BENCH_baseline.json`` and
+fails when a guarded metric regresses by more than ``--tolerance`` (default
+30%).
+
+Guarded metrics are RELATIVE speedups (v2-codec vs legacy on the same data,
+parallel vs serial on the same machine), not absolute MB/s: CI runners and
+dev machines differ wildly in absolute throughput, but a relative speedup
+collapsing by a third means the optimized path itself regressed.
+
+Usage:
+    python -m benchmarks.check_regression BENCH_baseline.json BENCH_new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: (path into the perf dict, human label); each must stay >= (1-tol) * baseline
+GUARDED = [
+    (("huffman", "speedup_enc"), "Huffman encode speedup (v2 vs legacy)"),
+    (("huffman", "speedup_encdec"), "Huffman enc+dec speedup (v2 vs legacy)"),
+    (("chunked_workers", "speedup_w4_vs_pr1"), "chunked w4 vs PR1-equivalent"),
+    (("chunked_workers", "speedup_w2_vs_w1"), "chunked w2 vs w1"),
+]
+
+
+def _perf_of(doc):
+    """Accept either a bare perf dict, a bench_throughput result, or a
+    ``benchmarks.run --json`` artifact (perf under the throughput row)."""
+    if "perf" in doc:
+        return doc["perf"]
+    if "huffman" in doc:
+        return doc
+    for row in doc.get("results", []):
+        derived = row.get("derived")
+        if isinstance(derived, dict) and "perf" in derived:
+            return derived["perf"]
+    raise SystemExit("no throughput perf section found in artifact")
+
+
+def _get(perf, path):
+    cur = perf
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return float(cur)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = _perf_of(json.load(f))
+    with open(args.candidate) as f:
+        cand = _perf_of(json.load(f))
+    backends = (base.get("lossless_backend"), cand.get("lossless_backend"))
+    backend_mismatch = backends[0] != backends[1]
+    if backend_mismatch:
+        print(
+            f"lossless backend differs (baseline={backends[0]}, candidate="
+            f"{backends[1]}): engine-level ratios include the lossless "
+            "stage's runtime share — chunked rows compared at 2x tolerance"
+        )
+    failures = []
+    for path, label in GUARDED:
+        tol = args.tolerance
+        if backend_mismatch and path[0] == "chunked_workers":
+            tol = min(0.9, 2.0 * tol)
+        b, c = _get(base, path), _get(cand, path)
+        if b is None or c is None:
+            print(f"SKIP {label}: metric missing (baseline={b}, candidate={c})")
+            continue
+        floor = b * (1.0 - tol)
+        status = "ok" if c >= floor else "REGRESSION"
+        print(f"{status:10s} {label}: baseline {b:.2f} candidate {c:.2f} floor {floor:.2f}")
+        if c < floor:
+            failures.append(label)
+    if failures:
+        print(f"FAILED: {len(failures)} metric(s) regressed >30%: {failures}")
+        return 1
+    print("throughput regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,8 +69,15 @@ def main() -> None:
             continue
         results.append(_timed(name, fn, args.full))
     if args.json:
+        from repro.core import lossless
+
+        doc = {
+            "full": args.full,
+            "lossless_backend": lossless.effective_backend("zstd"),
+            "results": results,
+        }
         with open(args.json, "w") as f:
-            json.dump({"full": args.full, "results": results}, f, default=str, indent=1)
+            json.dump(doc, f, default=str, indent=1)
         print(f"wrote {args.json}")
 
 

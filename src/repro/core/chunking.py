@@ -27,11 +27,32 @@ the GLOBAL array statistics before chunking (so chunked output honours the
 same bound as one-shot compression).  When compressing an unbounded iterator
 of slabs the global range is unknown; REL then resolves per-slab, which is
 strictly tighter on low-range slabs (documented, still error-bounded).
+
+Parallelism: chunks are independent after the global bound is resolved, so
+both select+compress and decompress fan out over a ``ThreadPoolExecutor``
+(``workers=`` on every entry point; numpy kernels and zlib/zstd release the
+GIL).  Results are reassembled in submission order, so parallel containers
+and frame streams are byte-identical to serial ones.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    TypeVar,
+    Union,
+)
 
 import msgpack
 import numpy as np
@@ -48,6 +69,39 @@ DEFAULT_CANDIDATES: Tuple[str, ...] = ("sz3_lorenzo", "sz3_lr", "sz3_interp")
 
 #: elements drawn from each chunk for candidate scoring
 SAMPLE_BUDGET = 4096
+
+_T = TypeVar("_T")
+_R = TypeVar("_R")
+
+
+def _parallel_map_ordered(
+    fn: Callable[[_T], _R], items: Iterable[_T], workers: int
+) -> Iterator[_R]:
+    """Apply ``fn`` across worker threads, yielding results in input order.
+
+    The per-chunk work (numpy kernels, zlib/zstd) releases the GIL, so
+    threads buy real parallelism without pickling chunk arrays the way a
+    process pool would.  At most ``2*workers`` tasks are in flight — the
+    streaming callers keep their bounded-memory guarantee (one raw chunk is
+    a view, but its compressed blob is retained until yielded).  Order is
+    deterministic by construction (a result deque, not as-completed), so
+    parallel output is byte-identical to serial output.
+    """
+    if workers <= 1:
+        for item in items:
+            yield fn(item)
+        return
+    # CPU-bound tasks: more threads than cores is pure contention, so the
+    # pool is clamped (the in-flight window still honours ``workers``)
+    pool_size = max(1, min(workers, os.cpu_count() or workers))
+    with ThreadPoolExecutor(max_workers=pool_size) as pool:
+        pending = collections.deque()
+        for item in items:
+            pending.append(pool.submit(fn, item))
+            if len(pending) >= 2 * workers:
+                yield pending.popleft().result()
+        while pending:
+            yield pending.popleft().result()
 
 
 # ---------------------------------------------------------------------------
@@ -214,12 +268,30 @@ class ChunkedCompressor:
         candidates: Sequence[str] = DEFAULT_CANDIDATES,
         chunk_bytes: int = 1 << 22,
         conf: Optional[CompressionConfig] = None,
+        workers: int = 1,
     ):
         self.candidates = tuple(candidates)
         self.chunk_bytes = int(chunk_bytes)
         self.conf = conf or CompressionConfig()
+        self.workers = max(1, int(workers))
 
     # -- shared per-chunk path ----------------------------------------------
+    def _compress_chunk(
+        self, chunk: np.ndarray, abs_eb: float, eff: CompressionConfig
+    ) -> Tuple[bytes, str, int]:
+        """Select + compress ONE chunk.  Self-contained per call: pipeline
+        instances hold quantizer state across their compress() internals, so
+        each task builds its own (construction is a few object allocations —
+        the expensive per-chunk state, e.g. Huffman decode tables, is cached
+        at module level in encoders.py).  This is what makes parallel output
+        byte-identical to serial: the function is pure in (chunk, eff)."""
+        pipelines = {name: _make_pipeline(name) for name in self.candidates}
+        name, _scores = select_pipeline(
+            chunk, abs_eb, eff, self.candidates, pipelines=pipelines
+        )
+        blob = pipelines[name].compress(chunk, eff).blob
+        return blob, name, int(chunk.shape[0] if chunk.ndim else chunk.size)
+
     def _chunk_frames(
         self, data: np.ndarray, conf: CompressionConfig
     ) -> Iterator[Tuple[bytes, str, int]]:
@@ -234,16 +306,17 @@ class ChunkedCompressor:
             abs_eb = float(np.finfo(np.float64).tiny)
         eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
         flat_leading = data.reshape(-1) if data.ndim == 0 else data
-        pipelines = {name: _make_pipeline(name) for name in self.candidates}
-        for sl in chunk_slices(
-            flat_leading.shape, flat_leading.dtype.itemsize, self.chunk_bytes
-        ):
-            chunk = flat_leading[sl]
-            name, _scores = select_pipeline(
-                chunk, abs_eb, eff, self.candidates, pipelines=pipelines
+        chunks = (
+            flat_leading[sl]
+            for sl in chunk_slices(
+                flat_leading.shape, flat_leading.dtype.itemsize, self.chunk_bytes
             )
-            blob = pipelines[name].compress(chunk, eff).blob
-            yield blob, name, int(chunk.shape[0] if chunk.ndim else chunk.size)
+        )
+        yield from _parallel_map_ordered(
+            lambda chunk: self._compress_chunk(chunk, abs_eb, eff),
+            chunks,
+            self.workers,
+        )
 
     # -- one-shot v2 container ----------------------------------------------
     def compress(
@@ -297,14 +370,31 @@ def _assemble_v2(
     return pack_container(header, b"".join(body_parts))
 
 
+#: default worker count for v2-container decompression via the generic
+#: ``pipeline.decompress`` entry point (which has no workers parameter);
+#: explicit callers pass ``workers=`` instead
+DECOMPRESS_WORKERS = 1
+
+
 def decompress_chunked(
-    blob: bytes, header: Dict[str, Any], body_off: int
+    blob: bytes, header: Dict[str, Any], body_off: int, workers: Optional[int] = None
 ) -> np.ndarray:
-    """Decode a v2 multi-chunk container (called from pipeline.decompress)."""
-    parts = [
-        pl_mod.decompress(blob[body_off + c["off"] : body_off + c["off"] + c["len"]])
-        for c in header["chunks"]
-    ]
+    """Decode a v2 multi-chunk container (called from pipeline.decompress).
+
+    Chunks are independent blobs, so they decode on ``workers`` threads
+    (default: module-level ``DECOMPRESS_WORKERS``); output ordering is
+    positional and unaffected by completion order.
+    """
+    workers = DECOMPRESS_WORKERS if workers is None else max(1, int(workers))
+    parts = list(
+        _parallel_map_ordered(
+            lambda c: pl_mod.decompress(
+                blob[body_off + c["off"] : body_off + c["off"] + c["len"]]
+            ),
+            header["chunks"],
+            workers,
+        )
+    )
     shape = tuple(header["shape"])
     dtype = np.dtype(header["dtype"])
     if not parts:
@@ -335,6 +425,7 @@ def compress_stream(
     conf: Optional[CompressionConfig] = None,
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
     chunk_bytes: int = 1 << 22,
+    workers: int = 1,
 ) -> Iterator[bytes]:
     """Yield a prologue frame, then one self-describing v1 blob per chunk.
 
@@ -342,9 +433,13 @@ def compress_stream(
     globally — the stream then reassembles bit-identically into the one-shot
     v2 container via :func:`frames_to_blob`) or an iterable of slabs (each
     slab is chunked independently as it arrives; REL bounds resolve per slab).
+    ``workers`` > 1 compresses chunks on a thread pool (frame order, and
+    therefore the byte stream, is unchanged).
     """
     conf = conf or CompressionConfig()
-    eng = ChunkedCompressor(candidates=candidates, chunk_bytes=chunk_bytes, conf=conf)
+    eng = ChunkedCompressor(
+        candidates=candidates, chunk_bytes=chunk_bytes, conf=conf, workers=workers
+    )
     prologue = _STREAM_MAGIC + msgpack.packb(
         {"v": _VERSION2, "axis": 0, "mode": conf.mode.value, "eb": float(conf.eb)},
         use_bin_type=True,
@@ -356,16 +451,17 @@ def compress_stream(
             yield blob
 
 
-def decompress_stream(frames: Iterable[bytes]) -> Iterator[np.ndarray]:
+def decompress_stream(
+    frames: Iterable[bytes], workers: int = 1
+) -> Iterator[np.ndarray]:
     """Inverse of :func:`compress_stream`: yield one decoded array per chunk.
 
     Tolerates a missing prologue (a bare sequence of v1/v2 blobs works too);
-    memory stays bounded by one chunk at a time.
+    memory stays bounded by one chunk (times the in-flight window when
+    ``workers`` > 1 decodes frames on a thread pool; order is preserved).
     """
-    for frame in frames:
-        if frame[:4] == _STREAM_MAGIC:
-            continue
-        yield pl_mod.decompress(frame)
+    payload = (f for f in frames if f[:4] != _STREAM_MAGIC)
+    yield from _parallel_map_ordered(pl_mod.decompress, payload, max(1, int(workers)))
 
 
 def frames_to_blob(frames: Iterable[bytes]) -> bytes:
@@ -456,10 +552,13 @@ def read_frames(fp) -> Iterator[bytes]:
 def sz3_chunked(
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
     chunk_bytes: int = 1 << 22,
+    workers: int = 1,
     **kw,
 ) -> ChunkedCompressor:
     """Named factory, registered alongside the paper pipelines."""
-    return ChunkedCompressor(candidates=candidates, chunk_bytes=chunk_bytes, **kw)
+    return ChunkedCompressor(
+        candidates=candidates, chunk_bytes=chunk_bytes, workers=workers, **kw
+    )
 
 
 # register with the named-pipeline table (PIPELINES lives in pipeline.py;

@@ -139,3 +139,13 @@ def make(name: str, **kw) -> LosslessBackend:
     if name not in _REGISTRY:
         raise KeyError(f"unknown lossless backend {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name](**kw)
+
+
+def effective_backend(name: str = "zstd") -> str:
+    """The backend ``make(name)`` will ACTUALLY bind in this process.
+
+    ``Zstd`` degrades to zlib when ``zstandard`` is missing (one warning per
+    process); benchmarks record this so throughput rows are attributable to
+    the real codec, not the requested one.
+    """
+    return "gzip" if (name == "zstd" and not _HAVE_ZSTD) else name

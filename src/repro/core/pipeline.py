@@ -166,25 +166,42 @@ class SZ3Compressor:
 
 
 def parse_header(blob: bytes) -> Tuple[Dict[str, Any], int]:
+    """Parse the container prologue; rejects truncated/corrupt blobs with
+    ``ValueError`` instead of surfacing numpy index errors from the body."""
+    if len(blob) < 20:
+        raise ValueError(
+            f"truncated SZ3J container: {len(blob)} bytes, need at least 20"
+        )
     if blob[:4] != _MAGIC:
         raise ValueError("not an SZ3J container")
     lens = np.frombuffer(blob, np.int64, count=2, offset=4)
-    hlen = int(lens[0])
-    header = msgpack.unpackb(blob[20 : 20 + hlen], raw=False)
+    hlen, blen = int(lens[0]), int(lens[1])
+    if hlen < 0 or blen < 0 or 20 + hlen + blen > len(blob):
+        raise ValueError(
+            f"corrupt SZ3J container: header={hlen} body={blen} bytes do not "
+            f"fit the {len(blob)}-byte buffer"
+        )
+    try:
+        header = msgpack.unpackb(blob[20 : 20 + hlen], raw=False)
+    except Exception as e:
+        raise ValueError(f"corrupt SZ3J container header: {e}") from e
+    if not isinstance(header, dict):
+        raise ValueError("corrupt SZ3J container header: not a map")
     return header, 20 + hlen
 
 
-def decompress(blob: bytes) -> np.ndarray:
+def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     """Self-describing decompression — rebuilds the pipeline from the header.
 
     Handles both container generations: v1 single-pipeline blobs and v2
     multi-chunk blobs (per-chunk spec + offsets; see chunking.py).
+    ``workers`` parallelizes v2 multi-chunk decode (ignored for v1 blobs).
     """
     header, body_off = parse_header(blob)
     if header.get("v", _VERSION) >= 2 and header.get("kind") == "chunked":
         from .chunking import decompress_chunked  # local: avoids import cycle
 
-        return decompress_chunked(blob, header, body_off)
+        return decompress_chunked(blob, header, body_off, workers=workers)
     spec = header["spec"]
     if spec["kind"] == "truncation":
         return TruncationCompressor._decompress_body(blob, header, body_off)

@@ -277,12 +277,32 @@ class ZeroPredictor(Predictor):
 # ---------------------------------------------------------------------------
 
 class LorenzoPredictor(Predictor):
-    """Parallel N-D Lorenzo via dual-quantization (DESIGN.md §3.1)."""
+    """Parallel N-D Lorenzo via dual-quantization (DESIGN.md §3.1).
+
+    Two execution routes behind the same codes/meta contract:
+
+      * numpy (default on CPU) — ``prequantize`` + ``lorenzo_filter`` on
+        int64, any ndim/order.
+      * device — the fused Pallas prequant+Lorenzo kernels
+        (``kernels/lorenzo``), for order-1 float32 1-D/2-D data whose
+        prequantized magnitudes pass the ``PIPELINE_SAFE`` int32 guard.
+        The kernel computes q in float32, so after encoding, reconstruction
+        is re-derived EXACTLY as both decode routes will compute it and any
+        bound-breaking point is patched into the fail channel — the error
+        bound is therefore identical to the numpy route's.  ``device="auto"``
+        engages on real TPUs only (interpret-mode Pallas on CPU is far
+        slower than numpy); ``"force"`` engages everywhere (tests);
+        ``"off"`` never.
+    """
 
     name = "lorenzo"
 
-    def __init__(self, order: Optional[int] = None):
+    def __init__(self, order: Optional[int] = None, device: str = "auto"):
         self.order = order
+        self.device = device
+
+    #: below this many elements the kernel dispatch overhead dominates
+    _DEVICE_MIN_SIZE = 4096
 
     def estimate_error(self, sample, abs_eb, conf):
         return code_bits(
@@ -293,8 +313,67 @@ class LorenzoPredictor(Predictor):
             conf.quant_radius,
         )
 
+    # -- device routing -----------------------------------------------------
+    def _device_ok(self, data: np.ndarray, eb: float, order: int) -> bool:
+        if self.device == "off" or order != 1:
+            return False
+        if (
+            data.ndim not in (1, 2)
+            or data.dtype != np.float32
+            or data.size < self._DEVICE_MIN_SIZE
+        ):
+            return False
+        try:
+            from ..kernels.lorenzo import ops as lops
+        except Exception:  # jax/pallas unavailable -> numpy route
+            return False
+        absmax = float(np.abs(data).max())
+        if not np.isfinite(absmax) or absmax / (2.0 * eb) >= lops.PIPELINE_SAFE:
+            return False
+        return True if self.device == "force" else lops.device_default()
+
+    def _compress_device(self, data, quantizer):
+        from ..kernels.lorenzo import ops as lops
+
+        eb = quantizer.eb
+        codes32, draw = lops.encode_pipeline(data, eb=eb, radius=quantizer.radius)
+        d = draw.astype(np.int64)
+        x64 = np.asarray(data, np.float64)
+        # The kernel prequantizes in float32 (vs float64 on the numpy route);
+        # verify the bound against BOTH decode routes' exact arithmetic and
+        # divert any straggler through the fail channel (raw values).
+        q = lorenzo_inverse(d, 1)
+        recon_np = quantizer.dequantize_int(q)
+        fail = np.abs(recon_np.astype(np.float64) - x64) > eb
+        recon_dev = lops.decode_pipeline(draw, eb=eb)
+        fail |= np.abs(recon_dev.astype(np.float64) - x64) > eb
+        flat = d.reshape(-1)
+        oor = np.abs(flat) >= quantizer.radius
+        if oor.any():
+            quantizer._store_unpred_int(flat[oor])
+        codes = codes32.reshape(-1).astype(quantizer.code_dtype)
+        meta: Dict[str, Any] = {"order": 1, "nfail": int(fail.sum()), "device": 1}
+        if meta["nfail"]:
+            meta["fail_mask"] = _pack_mask(fail)
+            meta["fail_vals"] = x64[fail].tobytes()
+        return codes, meta
+
+    def _decode_device_ok(self, shape, dtype, eb: float) -> bool:
+        if self.device == "off" or len(shape) not in (1, 2):
+            return False
+        if np.dtype(dtype) != np.float32:
+            return False
+        try:
+            from ..kernels.lorenzo import ops as lops
+        except Exception:
+            return False
+        return True if self.device == "force" else lops.device_default()
+
+    # -- the two directions --------------------------------------------------
     def compress(self, data, quantizer, conf):
         order = self.order or conf.lorenzo_order
+        if self._device_ok(np.asarray(data), quantizer.eb, order):
+            return self._compress_device(np.asarray(data), quantizer)
         q, recon, fail = quantizer.prequantize(data)
         d = lorenzo_filter(q, order)
         codes = quantizer.quantize_int_diff(d.reshape(-1))
@@ -307,8 +386,15 @@ class LorenzoPredictor(Predictor):
     def decompress(self, codes, shape, dtype, quantizer, conf, meta):
         order = int(meta["order"])
         d = quantizer.recover_int_diff(codes).reshape(shape)
-        q = lorenzo_inverse(d, order)
-        out = quantizer.dequantize_int(q).astype(dtype)
+        if meta.get("device") and self._decode_device_ok(shape, dtype, quantizer.eb):
+            # compress verified this blob against the kernel decode's float32
+            # arithmetic, so the fused route is bound-exact here
+            from ..kernels.lorenzo import ops as lops
+
+            out = lops.decode_pipeline(d.astype(np.int32), eb=quantizer.eb).astype(dtype)
+        else:
+            q = lorenzo_inverse(d, order)
+            out = quantizer.dequantize_int(q).astype(dtype)
         if meta.get("nfail"):
             mask = _unpack_mask(meta["fail_mask"], int(np.prod(shape))).reshape(shape)
             out[mask] = np.frombuffer(meta["fail_vals"], np.float64).astype(dtype)
@@ -368,7 +454,11 @@ class LorenzoSequentialPredictor(Predictor):
         """mode: 'compress_linear' | 'compress_aligned' | 'decompress'."""
         import jax
         import jax.numpy as jnp
-        from jax import enable_x64
+
+        try:  # moved across jax versions (top-level alias added post-0.4)
+            from jax import enable_x64
+        except ImportError:
+            from jax.experimental import enable_x64
 
         subsets = self._stencil(shape)
         L = max(off for off, _, _ in subsets) + 1

@@ -45,6 +45,10 @@ from ..core.lossless import Zstd, make as make_lossless
 # memory per chunk + per-chunk pipeline selection) instead of one-shot Lorenzo
 _CHUNKED_MIN_BYTES = 1 << 22
 
+# chunk workers for large lossy leaves: saves run on a background thread
+# already, so stay modest — half the cores, at least 1
+_CHUNK_WORKERS = max(1, (os.cpu_count() or 2) // 2)
+
 
 # ---------------------------------------------------------------------------
 # per-leaf codecs
@@ -93,7 +97,9 @@ class CheckpointPolicy:
 _zstd = Zstd(level=3)
 
 
-def encode_leaf(arr: np.ndarray, pol: LeafPolicy) -> Tuple[bytes, Dict[str, Any]]:
+def encode_leaf(
+    arr: np.ndarray, pol: LeafPolicy, workers: Optional[int] = None
+) -> Tuple[bytes, Dict[str, Any]]:
     meta: Dict[str, Any] = {
         "shape": list(arr.shape),
         "dtype": arr.dtype.str,
@@ -109,7 +115,10 @@ def encode_leaf(arr: np.ndarray, pol: LeafPolicy) -> Tuple[bytes, Dict[str, Any]
         flat2d = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
         if arr.nbytes >= _CHUNKED_MIN_BYTES:
-            comp = ChunkedCompressor(candidates=("sz3_lorenzo", "sz3_lr"))
+            comp = ChunkedCompressor(
+                candidates=("sz3_lorenzo", "sz3_lr"),
+                workers=_CHUNK_WORKERS if workers is None else workers,
+            )
             meta["codec"] = "sz3_chunked_rel"
         else:
             comp = sz3_lorenzo()
@@ -168,11 +177,13 @@ class CheckpointManager:
         policy: CheckpointPolicy = CheckpointPolicy(),
         keep: int = 3,
         use_async: bool = True,
+        workers: Optional[int] = None,
     ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.policy = policy
         self.keep = keep
+        self.workers = workers  # chunk workers for large lossy leaves
         self._pool = cf.ThreadPoolExecutor(max_workers=1) if use_async else None
         self._pending: Optional[cf.Future] = None
         self._lock = threading.Lock()
@@ -206,7 +217,7 @@ class CheckpointManager:
             pstr = _path_str(path)
             pol = self.policy.for_path(pstr)
             arr = np.asarray(leaf)
-            blob, meta = encode_leaf(arr, pol)
+            blob, meta = encode_leaf(arr, pol, workers=self.workers)
             fname = hashlib.sha1(pstr.encode()).hexdigest()[:16] + ".bin"
             (tmp / fname).write_bytes(blob)
             meta["file"] = fname

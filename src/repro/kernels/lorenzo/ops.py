@@ -19,9 +19,49 @@ from . import ref as _ref
 
 INT32_SAFE = float(1 << 30)
 
+#: guard for the BOUND-EXACT pipeline fast path (predictors.LorenzoPredictor):
+#: beyond int32 range safety, prequantized magnitudes must stay small enough
+#: that float32 kernel arithmetic cannot round reconstructions past the error
+#: bound before the host-side verification patches the stragglers.
+PIPELINE_SAFE = float(1 << 22)
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def device_default() -> bool:
+    """Should the main pipeline route through the fused kernels by default?
+
+    True on real TPUs (compiled Pallas).  On CPU the kernels only run in
+    interpret mode — orders of magnitude slower than the numpy path — so the
+    pipeline keeps numpy unless a caller forces the kernel path (tests do,
+    on small arrays).
+    """
+    return jax.default_backend() == "tpu"
+
+
+def encode_pipeline(
+    x: np.ndarray, *, eb: float, radius: int = 32768, interpret: bool = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused prequant+Lorenzo encode for the REAL pipeline (host arrays).
+
+    Accepts 1-D (row-independent "1d" stencil) or 2-D ("2d" stencil) float32
+    and returns host (codes, raw_diffs) int32 in the input's shape.  Callers
+    are responsible for the PIPELINE_SAFE guard and for verifying/patching
+    reconstruction against the error bound (predictors.LorenzoPredictor).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    x2d = jnp.asarray(x if x.ndim == 2 else x.reshape(1, -1), jnp.float32)
+    mode = "2d" if x.ndim == 2 else "1d"
+    codes, draw = lorenzo_encode(
+        x2d, eb=float(eb), radius=int(radius), mode=mode, interpret=interpret
+    )
+    shape = x.shape
+    return (
+        np.asarray(codes).reshape(shape),
+        np.asarray(draw).reshape(shape),
+    )
 
 
 def _pad2d(x: jnp.ndarray, bm: int, bn: int) -> Tuple[jnp.ndarray, Tuple[int, int]]:
@@ -71,6 +111,21 @@ def lorenzo_decode(
         dp, (R, C) = _pad2d(d, bm, 128)
         out = _k.decode_2d(dp, eb, bm=bm, interpret=interpret)
     return out[:R, :C]
+
+
+def decode_pipeline(
+    d: np.ndarray, *, eb: float, interpret: bool = None
+) -> np.ndarray:
+    """Fused cumsum+dequant decode for the REAL pipeline (host arrays).
+
+    Inverse of :func:`encode_pipeline`: 1-D or 2-D int32 raw diffs (with
+    unpredictable positions already substituted) -> float32 reconstruction.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    d2 = jnp.asarray(d if d.ndim == 2 else d.reshape(1, -1), jnp.int32)
+    mode = "2d" if d.ndim == 2 else "1d"
+    out = lorenzo_decode(d2, eb=float(eb), mode=mode, interpret=interpret)
+    return np.asarray(out).reshape(d.shape)
 
 
 def lorenzo_roundtrip_check(x: np.ndarray, eb: float) -> dict:

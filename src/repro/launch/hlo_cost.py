@@ -86,16 +86,20 @@ class Computation:
 
 
 def _split_args(arg_str: str) -> List[str]:
-    """Operand names from 'op(%a, %b, ...), attr=...' (stop at depth-0 ')')."""
+    """Operand names from 'op(%a, %b, ...), attr=...' (stop at depth-0 ')').
+
+    Depth tracks (), [] and {} alike: typed operands carry shapes/layouts
+    like ``f32[4,32]{1,0}`` whose commas must not split the argument.
+    """
     out, depth, cur = [], 0, []
     for ch in arg_str:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
-            depth -= 1
+            depth = max(0, depth - 1)
             cur.append(ch)
         elif ch == "," and depth == 0:
             out.append("".join(cur).strip())
@@ -106,8 +110,22 @@ def _split_args(arg_str: str) -> List[str]:
         out.append("".join(cur).strip())
     names = []
     for a in out:
-        m = re.match(r"%?([\w.\-]+)", a.strip())
-        if m and not a.strip()[0].isdigit():
+        a = a.strip()
+        if not a or a[0].isdigit():
+            continue
+        # scheduled-HLO operands are typed: "f32[4,32]{2,1,0} %Arg_0.1" — the
+        # %-prefixed token is the name; bare "%name"/"name" forms keep working
+        pm = re.search(r"%([\w.\-]+)", a)
+        if pm:
+            names.append(pm.group(1))
+            continue
+        # sigil-less typed form "f32[4,32]{1,0} Arg_0.1": drop the type prefix
+        tm = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+([\w.\-]+)", a)
+        if tm:
+            names.append(tm.group(1))
+            continue
+        m = re.match(r"([\w.\-]+)", a)
+        if m:
             names.append(m.group(1))
     return names
 

@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--kv", default="bf16", choices=["bf16", "int8"])
     ap.add_argument("--offload-kv", default="none", choices=["none", "chunked"])
     ap.add_argument("--offload-eb", type=float, default=1e-3)
+    ap.add_argument(
+        "--offload-workers",
+        type=int,
+        default=1,
+        help="chunk-compression threads for the KV offload stream",
+    )
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -57,10 +63,10 @@ def main():
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
     if args.offload_kv == "chunked":
-        offload_cache(cache, eb=args.offload_eb)
+        offload_cache(cache, eb=args.offload_eb, workers=args.offload_workers)
 
 
-def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20):
+def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20, workers: int = 1):
     """Stream every float cache leaf through the chunked engine; report totals.
 
     Frames are produced (and could be written to host/disk) one chunk at a
@@ -79,7 +85,7 @@ def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20):
             continue
         a = np.asarray(jnp.asarray(leaf, jnp.float32))
         arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
-        for frame in compress_stream(arr, conf, chunk_bytes=chunk_bytes):
+        for frame in compress_stream(arr, conf, chunk_bytes=chunk_bytes, workers=workers):
             n_out += len(frame)
         n_in += arr.nbytes
         n_leaves += 1

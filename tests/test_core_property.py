@@ -83,6 +83,34 @@ def test_encoder_roundtrip_exact(syms, enc_name):
 
 
 @settings(max_examples=30, deadline=None)
+@given(syms=st.lists(st.integers(0, 70000), min_size=0, max_size=5000))
+def test_huffman_v1_v2_stream_compat(syms):
+    """Word-packed v2 streams round-trip AND pre-PR2 v1 blobs still decode
+    (both directions: the legacy decoder also reads v2 streams)."""
+    arr = np.asarray(syms, np.uint32)
+    v2 = encoders.HuffmanEncoder()
+    legacy = encoders.LegacyHuffmanEncoder()
+    blob_v2 = v2.encode(arr)
+    blob_v1 = legacy.encode(arr)
+    expect = arr.astype(np.int64)
+    assert np.array_equal(v2.decode(blob_v2, arr.size), expect)
+    assert np.array_equal(v2.decode(blob_v1, arr.size), expect)
+    assert np.array_equal(legacy.decode(blob_v2, arr.size), expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(x=arrays(max_elems=4000), workers=st.integers(2, 4))
+def test_chunked_workers_byte_identical_property(x, workers):
+    from repro.core import ChunkedCompressor
+
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    cb = max(1, x.nbytes // 3)
+    serial = ChunkedCompressor(chunk_bytes=cb, workers=1).compress(x, conf).blob
+    parallel = ChunkedCompressor(chunk_bytes=cb, workers=workers).compress(x, conf).blob
+    assert serial == parallel
+
+
+@settings(max_examples=30, deadline=None)
 @given(
     vals=st.lists(
         st.integers(-(2**62), 2**62), min_size=0, max_size=2000
