@@ -27,10 +27,12 @@ from repro.core import (
     decompress,
     encoders,
     lossless,
+    sz3_auto,
     sz3_chunked,
     sz3_interp,
     sz3_lorenzo,
     sz3_lr,
+    sz3_transform,
     sz3_truncation,
 )
 from repro.core.chunking import ChunkedCompressor
@@ -123,12 +125,54 @@ def chunked_rows(full: bool = False, seed: int = 3):
     return out
 
 
+def transform_rows(full: bool = False, seed: int = 3):
+    """Transform-coder subsystem health: ratio advantage over Lorenzo on an
+    oscillatory field (the workload class the subsystem exists for) and
+    round-trip throughput.  The ratio advantage is data-deterministic (fixed
+    seed), so the regression gate can guard it machine-independently."""
+    n = (1 << 23) if full else (1 << 21)
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    # near-Nyquist tone + smooth drift + noise floor: Lorenzo-hostile
+    data = (
+        np.sin(0.93 * np.pi * t)
+        + 0.1 * np.sin(2e-4 * t)
+        + 0.01 * rng.standard_normal(n)
+    ).astype(np.float32)
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+    mb = data.nbytes / 1e6
+    comp_t, comp_l = sz3_transform(), sz3_lorenzo()
+    t_enc, res_t = _best(lambda: comp_t.compress(data, conf))
+    t_dec, xhat = _best(lambda: decompress(res_t.blob))
+    _, res_l = _best(lambda: comp_l.compress(data, conf), repeats=1)
+    eb_abs = 1e-3 * float(data.max() - data.min())
+    bound_ok = float(np.abs(xhat.astype(np.float64) - data).max() <= eb_abs * (1 + 1e-9))
+    auto = sz3_auto(chunk_bytes=1 << 20)
+    _, res_a = _best(lambda: auto.compress(data, conf, with_stats=True), repeats=1)
+    picked = [c["pipeline"] for c in res_a.meta["chunks"]]
+    return {
+        "n": n,
+        "data_MB": round(mb, 1),
+        "ratio_transform": round(res_t.ratio, 2),
+        "ratio_lorenzo": round(res_l.ratio, 2),
+        "ratio_vs_lorenzo": round(res_t.ratio / res_l.ratio, 3),
+        "bound_ok": bound_ok,
+        "compress_MBps": round(mb / t_enc, 1),
+        "decompress_MBps": round(mb / t_dec, 1),
+        "auto_ratio": round(res_a.ratio, 2),
+        "auto_transform_chunk_share": round(
+            sum(p == "sz3_transform" for p in picked) / max(1, len(picked)), 3
+        ),
+    }
+
+
 def perf_rows(full: bool = False):
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
         "cpu_count": os.cpu_count(),
         "huffman": huffman_rows(full),
         "chunked_workers": chunked_rows(full),
+        "transform": transform_rows(full),
     }
 
 
@@ -143,7 +187,9 @@ def run(fields=None, seed: int = 3, repeats: int = 1):
             ("SZ3-Lorenzo(dualquant)", sz3_lorenzo()),
             ("SZ3-LR", sz3_lr()),
             ("SZ3-Interp", sz3_interp()),
+            ("SZ3-Transform", sz3_transform()),
             ("SZ3-Chunked(adaptive)", sz3_chunked(chunk_bytes=1 << 21)),
+            ("SZ3-Auto(pred+transform)", sz3_auto(chunk_bytes=1 << 21)),
         ]:
             t0 = time.perf_counter()
             for _ in range(repeats):

@@ -25,6 +25,10 @@ GUARDED = [
     (("huffman", "speedup_encdec"), "Huffman enc+dec speedup (v2 vs legacy)"),
     (("chunked_workers", "speedup_w4_vs_pr1"), "chunked w4 vs PR1-equivalent"),
     (("chunked_workers", "speedup_w2_vs_w1"), "chunked w2 vs w1"),
+    # transform subsystem: rate-distortion advantage on its home workload
+    # (data-deterministic ratio quotient, not MB/s — machine independent)
+    (("transform", "ratio_vs_lorenzo"), "transform ratio advantage vs Lorenzo (oscillatory)"),
+    (("transform", "bound_ok"), "transform round-trip within error bound"),
 ]
 
 

@@ -35,6 +35,13 @@ from .chunking import (
     sz3_chunked,
     write_frames,
 )
+from . import transform
+from .transform import (  # noqa: I001  (transform must import after chunking)
+    AUTO_CANDIDATES,
+    TransformCompressor,
+    sz3_auto,
+    sz3_transform,
+)
 
 __all__ = [
     "CompressionConfig",
@@ -56,6 +63,11 @@ __all__ = [
     "sz3_aps",
     "ChunkedCompressor",
     "sz3_chunked",
+    "TransformCompressor",
+    "sz3_transform",
+    "sz3_auto",
+    "AUTO_CANDIDATES",
+    "transform",
     "compress_stream",
     "decompress_stream",
     "decompress_chunk",

@@ -212,10 +212,13 @@ def select_pipeline(
     eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
     ests: Dict[str, Optional[float]] = {}
     for name in candidates:
-        pred = getattr(pipelines[name], "predictor", None)
-        ests[name] = (
-            pred.estimate_error(sample, abs_eb, conf) if pred is not None else None
-        )
+        # pipeline-level estimator first (whole-pipeline coders, e.g. the
+        # transform family), else the predictor's (Algorithm-1 pipelines)
+        est_fn = getattr(pipelines[name], "estimate_error", None)
+        if est_fn is None:
+            pred = getattr(pipelines[name], "predictor", None)
+            est_fn = pred.estimate_error if pred is not None else None
+        ests[name] = est_fn(sample, abs_eb, conf) if est_fn is not None else None
     estimated = {k: float(v) for k, v in ests.items() if v is not None}
     finalists = [k for k, v in ests.items() if v is None]  # no estimator -> runoff
     if estimated:
@@ -512,6 +515,8 @@ def _pipeline_name_from_spec(spec: Dict[str, Any]) -> str:
     """Recover the factory name a v1 blob was produced by (best effort)."""
     if spec.get("kind") == "truncation":
         return "sz3_truncation"
+    if spec.get("kind") == "transform":
+        return "sz3_transform"
     pred = spec.get("predictor")
     if pred == "composite":
         return "sz3_lr"

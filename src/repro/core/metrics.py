@@ -22,14 +22,19 @@ def compression_ratio(original_nbytes: int, compressed_nbytes: int) -> float:
     return original_nbytes / compressed_nbytes
 
 
-def bit_rate(original: Union[Array, int], compressed_nbytes: int, itemsize: int = None) -> float:
-    """Bits per element after compression (paper: bits/cr)."""
+def bit_rate(original: Union[Array, int], compressed_nbytes: int) -> float:
+    """Bits per value after compression.
+
+    The paper (§4.3) defines bit-rate as ``itemsize * 8 / cr`` with
+    ``cr = original_nbytes / compressed_nbytes``; since ``original_nbytes =
+    n * itemsize`` this reduces to ``compressed_nbytes * 8 / n`` — the
+    itemsize cancels, so only the element count matters.  ``original`` is
+    either the array itself or its element count.
+    """
     if isinstance(original, (int, np.integer)):
         n = int(original)
     else:
-        arr = _np(original)
-        n = arr.size
-        itemsize = arr.itemsize if itemsize is None else itemsize
+        n = _np(original).size
     if n == 0:
         return 0.0
     return compressed_nbytes * 8.0 / n

@@ -17,6 +17,10 @@ so ``decompress(blob)`` rebuilds the exact pipeline.  Named factory pipelines:
   sz3_lorenzo     — pure dual-quant Lorenzo (TPU-native fast path)
   sz3_chunked     — streaming chunked engine, per-chunk pipeline selection
                     (registered by chunking.py; emits the v2 container)
+  sz3_transform   — blockwise decorrelating transform + exponent-aligned
+                    bitplane coding (registered by transform.py; v3 header)
+  sz3_auto        — chunked engine whose candidate set spans BOTH coder
+                    families (prediction + transform; transform.py)
 """
 from __future__ import annotations
 
@@ -205,6 +209,10 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     spec = header["spec"]
     if spec["kind"] == "truncation":
         return TruncationCompressor._decompress_body(blob, header, body_off)
+    if spec["kind"] == "transform":  # v3 blockwise-transform containers
+        from .transform import TransformCompressor  # local: avoids import cycle
+
+        return TransformCompressor._decompress_body(blob, header, body_off)
     comp = SZ3Compressor.from_spec(spec)
     body = comp.lossless.decompress(blob[body_off:])
     enc_bytes = body[: header["enc_len"]]

@@ -115,11 +115,14 @@ def encode_leaf(
         flat2d = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
         if arr.nbytes >= _CHUNKED_MIN_BYTES:
+            # both coder families contest per chunk (optimizer moments are
+            # usually Lorenzo-friendly, but attention-derived leaves can be
+            # oscillatory along the feature axis — transform wins those)
             comp = ChunkedCompressor(
-                candidates=("sz3_lorenzo", "sz3_lr"),
+                candidates=("sz3_lorenzo", "sz3_lr", "sz3_transform"),
                 workers=_CHUNK_WORKERS if workers is None else workers,
             )
-            meta["codec"] = "sz3_chunked_rel"
+            meta["codec"] = "sz3_auto_rel"
         else:
             comp = sz3_lorenzo()
             meta["codec"] = "sz3_lorenzo_rel"
@@ -139,8 +142,8 @@ def decode_leaf(blob: bytes, meta: Dict[str, Any]) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
     codec = meta["codec"]
-    if codec in ("sz3_lorenzo_rel", "sz3_chunked_rel"):
-        # both are self-describing SZ3 containers (v1 / v2 multi-chunk)
+    if codec in ("sz3_lorenzo_rel", "sz3_chunked_rel", "sz3_auto_rel"):
+        # all are self-describing SZ3 containers (v1 / v2 multi-chunk / v3)
         arr = sz3_decompress(blob)
         return arr.reshape(shape).astype(dtype)
     if codec == "raw":

@@ -3,4 +3,4 @@
 # Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 # ref.py (pure-jnp oracle).  Validated in interpret mode on CPU; compiled on
 # TPU (ops.py selects by backend).
-from . import bitplane, kvquant, lorenzo  # noqa: F401
+from . import bitplane, kvquant, lorenzo, transform  # noqa: F401

@@ -19,7 +19,9 @@ def _interpret_default() -> bool:
 def bitplane_encode(vals: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
     """Flat uint32 values -> (32, ceil(n/32)) plane words (plane p = row p)."""
     n = vals.shape[0]
-    pad = (-n) % (32 * 512)
+    # empty input still pads to one tile: the kernel grid needs >= 1 step
+    # (decode crops back to n values, so the zero words are never observed)
+    pad = (-n) % (32 * 512) or (32 * 512 if n == 0 else 0)
     v = jnp.pad(vals.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
     return _k.encode(v, interpret=interpret)
 

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: blockwise 4-point decorrelating transform (fwd/inv).
+
+The transform stage of the ZFP-style coder (core/transform.py §device path):
+each (4, 4) block of a 2-D field is rotated by the orthonormal DCT-II basis,
+``c = M b M^T`` (or along the last axis only in "1d" mode).  On TPU this is a
+pure VPU problem: a (bm, bn) VMEM tile holds bm/4 x bn/4 independent blocks,
+and the per-axis rotation is four shifted multiply-accumulates over the lane
+dimension — no MXU, no gathers, no cross-tile dependency (contrast with the
+Lorenzo kernels' carry ring: blocks never straddle tiles because bm, bn are
+multiples of 4).
+
+Grid conventions: grid (R/bm, C/bn), both dimensions parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..compat import tpu_compiler_params
+from .ref import MAT
+
+_PAR = tpu_compiler_params(("parallel", "parallel"))
+
+
+def _rotate_last(t: jnp.ndarray, m) -> jnp.ndarray:
+    """Apply the 4-point basis along the last axis of a (bm, bn) tile.
+
+    The tile is viewed as (bm, bn/4, 4); out[..., k] = sum_j m[k, j] t[..., j]
+    is unrolled into 4 lane-aligned scaled adds (static 4x4 coefficients).
+    """
+    bm, bn = t.shape
+    b = t.reshape(bm, bn // 4, 4)
+    out = [
+        sum(float(m[k][j]) * b[:, :, j] for j in range(4)) for k in range(4)
+    ]
+    return jnp.stack(out, axis=-1).reshape(bm, bn)
+
+
+def _rotate_rows(t: jnp.ndarray, m) -> jnp.ndarray:
+    """Apply the basis along the first (sublane) axis of a (bm, bn) tile."""
+    bm, bn = t.shape
+    b = t.reshape(bm // 4, 4, bn)
+    out = [
+        sum(float(m[k][j]) * b[:, j, :] for j in range(4)) for k in range(4)
+    ]
+    return jnp.stack(out, axis=1).reshape(bm, bn)
+
+
+def _kernel(x_ref, o_ref, *, m, mode):
+    t = x_ref[...].astype(jnp.float32)
+    t = _rotate_last(t, m)
+    if mode == "2d":
+        t = _rotate_rows(t, m)
+    o_ref[...] = t
+
+
+def _call(x, *, m, mode, bm, bn, interpret):
+    R, C = x.shape
+    kern = functools.partial(_kernel, m=m, mode=mode)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        grid=(R // bm, C // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        compiler_params=_PAR,
+        interpret=interpret,
+    )(x)
+
+
+_M_FWD = tuple(tuple(row) for row in MAT.tolist())
+_M_INV = tuple(tuple(row) for row in MAT.T.tolist())
+
+
+def fwd(x, *, mode="2d", bm=8, bn=128, interpret=True):
+    """(R, C) float32, R % bm == 0 and C % bn == 0 -> coefficient grid."""
+    return _call(x, m=_M_FWD, mode=mode, bm=bm, bn=bn, interpret=interpret)
+
+
+def inv(c, *, mode="2d", bm=8, bn=128, interpret=True):
+    return _call(c, m=_M_INV, mode=mode, bm=bm, bn=bn, interpret=interpret)

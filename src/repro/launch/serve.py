@@ -26,7 +26,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--kv", default="bf16", choices=["bf16", "int8"])
-    ap.add_argument("--offload-kv", default="none", choices=["none", "chunked"])
+    ap.add_argument(
+        "--offload-kv",
+        default="none",
+        choices=["none", "chunked", "auto"],
+        help="'chunked': prediction-pipeline candidates only; 'auto': adds "
+        "the sz3_transform candidate (KV channels are often oscillatory)",
+    )
     ap.add_argument("--offload-eb", type=float, default=1e-3)
     ap.add_argument(
         "--offload-workers",
@@ -62,19 +68,36 @@ def main():
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
-    if args.offload_kv == "chunked":
-        offload_cache(cache, eb=args.offload_eb, workers=args.offload_workers)
+    if args.offload_kv in ("chunked", "auto"):
+        offload_cache(
+            cache,
+            eb=args.offload_eb,
+            workers=args.offload_workers,
+            candidates="auto" if args.offload_kv == "auto" else None,
+        )
 
 
-def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20, workers: int = 1):
+def offload_cache(
+    cache,
+    eb: float = 1e-3,
+    chunk_bytes: int = 1 << 20,
+    workers: int = 1,
+    candidates=None,
+):
     """Stream every float cache leaf through the chunked engine; report totals.
 
     Frames are produced (and could be written to host/disk) one chunk at a
     time — working memory stays bounded by one chunk regardless of cache size.
+    ``candidates="auto"`` (or an explicit name tuple) widens the per-chunk
+    contest to the transform coder family.
     """
-    from repro.core import CompressionConfig, ErrorBoundMode
-    from repro.core.chunking import compress_stream
+    from repro.core import AUTO_CANDIDATES, CompressionConfig, ErrorBoundMode
+    from repro.core.chunking import DEFAULT_CANDIDATES, compress_stream
 
+    if candidates is None:
+        candidates = DEFAULT_CANDIDATES
+    elif candidates == "auto":
+        candidates = AUTO_CANDIDATES
     conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=eb)
     n_in = n_out = n_leaves = 0
     t0 = time.perf_counter()
@@ -85,7 +108,9 @@ def offload_cache(cache, eb: float = 1e-3, chunk_bytes: int = 1 << 20, workers: 
             continue
         a = np.asarray(jnp.asarray(leaf, jnp.float32))
         arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
-        for frame in compress_stream(arr, conf, chunk_bytes=chunk_bytes, workers=workers):
+        for frame in compress_stream(
+            arr, conf, candidates=candidates, chunk_bytes=chunk_bytes, workers=workers
+        ):
             n_out += len(frame)
         n_in += arr.nbytes
         n_leaves += 1

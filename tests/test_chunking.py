@@ -227,7 +227,11 @@ def test_checkpoint_leaf_uses_chunked_codec_and_roundtrips():
 
     x = _smooth((1024, 1024), np.float32, seed=2)  # 4 MiB -> chunked codec
     blob, meta = encode_leaf(x, LeafPolicy("lossy", 1e-4))
-    assert meta["codec"] == "sz3_chunked_rel"
+    # big leaves ride the hybrid (prediction+transform) chunked codec; the
+    # legacy "sz3_chunked_rel" tag still decodes (decode_leaf accepts both)
+    assert meta["codec"] == "sz3_auto_rel"
+    legacy_meta = dict(meta, codec="sz3_chunked_rel")
+    assert np.array_equal(decode_leaf(blob, legacy_meta), decode_leaf(blob, meta))
     xhat = decode_leaf(blob, meta)
     assert xhat.shape == x.shape and xhat.dtype == x.dtype
     abs_eb = 1e-4 * float(x.max() - x.min())

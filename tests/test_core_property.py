@@ -146,6 +146,56 @@ def test_sequential_vs_dualquant_both_bounded(x, eb):
         assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-6), type(pred).__name__
 
 
+@settings(max_examples=25, deadline=None)
+@given(x=arrays(), eb=st.sampled_from([1e-1, 1e-3, 1e-6]))
+def test_transform_error_bound_invariant(x, eb):
+    """The transform coder (fourth family) honours the ABS bound on every
+    shape x distribution x dtype the prediction pipelines are held to."""
+    from repro.core import sz3_transform
+
+    res = sz3_transform().compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb))
+    xhat = decompress(res.blob)
+    assert xhat.shape == x.shape
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(x=arrays(max_elems=4000), workers=st.integers(2, 4))
+def test_auto_chunked_workers_byte_identical_property(x, workers):
+    """The hybrid (prediction+transform) candidate set keeps the chunked
+    engine's serial-vs-parallel byte-identity guarantee."""
+    from repro.core import sz3_auto
+
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    cb = max(1, x.nbytes // 3)
+    serial = sz3_auto(chunk_bytes=cb, workers=1).compress(x, conf).blob
+    parallel = sz3_auto(chunk_bytes=cb, workers=workers).compress(x, conf).blob
+    assert serial == parallel
+    assert metrics.max_abs_error(x, decompress(parallel)) <= 1e-3 * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(x=arrays(max_elems=3000), eb=st.sampled_from([1e-1, 1e-3]))
+def test_v1_v2_streams_unchanged_by_transform(x, eb):
+    """Adding the v3 transform family must leave the existing container
+    generations untouched: v1 single-pipeline blobs and v2 chunked blobs
+    (DEFAULT candidates) carry no transform chunks and still decode."""
+    from repro.core import ChunkedCompressor, parse_header
+    from repro.core.chunking import DEFAULT_CANDIDATES
+
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb)
+    v1 = SZ3Compressor().compress(x, conf).blob
+    h1, _ = parse_header(v1)
+    assert h1["v"] == 1 and h1["spec"]["kind"] != "transform"
+    assert metrics.max_abs_error(x, decompress(v1)) <= eb * (1 + 1e-6)
+    assert "sz3_transform" not in DEFAULT_CANDIDATES  # v2 byte stability
+    v2 = ChunkedCompressor(chunk_bytes=max(1, x.nbytes // 2)).compress(x, conf).blob
+    h2, _ = parse_header(v2)
+    assert h2["v"] == 2
+    assert all(c["pipeline"] != "sz3_transform" for c in h2["chunks"])
+    assert metrics.max_abs_error(x, decompress(v2)) <= eb * (1 + 1e-6)
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     x=arrays(max_elems=4000),

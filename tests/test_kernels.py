@@ -30,6 +30,12 @@ from repro.kernels.lorenzo import (
     ref_decode,
     ref_encode,
 )
+from repro.kernels.transform import (
+    ref_fwd as tf_ref_fwd,
+    ref_inv as tf_ref_inv,
+    transform_fwd,
+    transform_inv,
+)
 
 
 @pytest.mark.parametrize(
@@ -77,6 +83,100 @@ def test_bitplane_sparsity_structure():
     vals = np.arange(4096, dtype=np.uint32) % 16  # only 4 low bits used
     w = np.asarray(bitplane_encode(jnp.asarray(vals)))
     assert np.all(w[4:, :] == 0)
+
+
+# ---------------------------------------------------------------------------
+# host codec vs device kernel parity (the two bitplane implementations must
+# agree on plane CONTENT: the unpred-aware quantizer serializes with the host
+# codec today and may hand the same integers to the kernel on TPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [0, 1, 31, 32, 33, 1000, 16384, 40009])
+def test_bitplane_host_kernel_parity(n):
+    """Host ``quantizers.bitplane_encode/decode`` and ``kernels/bitplane``
+    (interpret mode) round-trip the same values AND store identical bits per
+    plane, including tail/partial-word and empty inputs."""
+    from repro.core.quantizers import (
+        bitplane_decode as host_decode,
+        bitplane_encode as host_encode,
+    )
+
+    rng = np.random.default_rng(n)
+    # magnitudes within uint32 so both codecs can represent them
+    vals = rng.integers(0, 1 << 32, size=n, dtype=np.uint64).astype(np.uint32)
+
+    # round-trips
+    host_back, consumed = host_decode(host_encode(vals.astype(np.int64)))
+    assert consumed == len(host_encode(vals.astype(np.int64)))
+    np.testing.assert_array_equal(host_back, vals.astype(np.int64))
+    kern_back = np.asarray(bitplane_decode(bitplane_encode(jnp.asarray(vals)), n))
+    np.testing.assert_array_equal(kern_back, vals)
+    if n == 0:
+        return
+
+    # plane-content parity: both codecs must store exactly ((vals >> p) & 1)
+    # for every plane p (the host packs big-endian bits MSB-plane-first, the
+    # kernel packs little-endian words plane-row-major — same content)
+    blob = host_encode(vals.astype(np.int64))
+    header = np.frombuffer(blob, np.int64, count=2)
+    nplanes = int(header[1])
+    assert nplanes == max(1, int(vals.max()).bit_length())
+    nbytes_plane = (n + 7) // 8
+    pos = 16 + nbytes_plane  # skip header + sign bitmap (all zero here)
+    words = np.asarray(bitplane_encode(jnp.asarray(vals)))
+    for i, p in enumerate(range(nplanes - 1, -1, -1)):  # host is MSB-first
+        host_bits = np.unpackbits(
+            np.frombuffer(blob, np.uint8, count=nbytes_plane, offset=pos + i * nbytes_plane),
+            count=n,
+        )
+        expect = ((vals >> np.uint32(p)) & np.uint32(1)).astype(np.uint8)
+        np.testing.assert_array_equal(host_bits, expect)
+        kern_bits = (
+            (words[p][np.arange(n) // 32] >> (np.arange(n) % 32).astype(np.uint32)) & 1
+        ).astype(np.uint8)
+        np.testing.assert_array_equal(kern_bits, expect)
+
+
+def test_bitplane_host_kernel_parity_signed_tail():
+    """Signed host values: the kernel codec sees magnitudes; the host sign
+    bitmap must round-trip alongside (tail length 3 exercises partial bytes
+    AND partial words)."""
+    from repro.core.quantizers import bitplane_decode as host_decode
+    from repro.core.quantizers import bitplane_encode as host_encode
+
+    vals = np.asarray([5, -1, (1 << 31), -(1 << 20), 0, -7, 123456789, -3, 9, 2, -2], np.int64)
+    back, _ = host_decode(host_encode(vals))
+    np.testing.assert_array_equal(back, vals)
+    mags = np.abs(vals).astype(np.uint32)
+    kern = np.asarray(bitplane_decode(bitplane_encode(jnp.asarray(mags)), mags.size))
+    np.testing.assert_array_equal(kern, mags)
+
+
+# ---------------------------------------------------------------------------
+# blockwise transform kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 256), (12, 132), (4, 640)])
+@pytest.mark.parametrize("mode", ["1d", "2d"])
+def test_transform_kernel_equals_ref(shape, mode):
+    rng = np.random.default_rng(abs(hash((shape, mode))) % 1000)
+    x = rng.normal(size=shape).astype(np.float32)
+    c_k = np.asarray(transform_fwd(jnp.asarray(x), mode=mode))
+    c_r = np.asarray(tf_ref_fwd(x, mode=mode))
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-6, atol=1e-6)
+    b_k = np.asarray(transform_inv(jnp.asarray(c_k), mode=mode))
+    b_r = np.asarray(tf_ref_inv(c_r, mode=mode))
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(b_k, x, rtol=1e-5, atol=1e-5)
+
+
+def test_transform_kernel_orthonormal():
+    """The shared basis must be orthonormal — the error-bound analysis in
+    core/transform.py (L_inf amplification of the inverse) depends on it."""
+    from repro.kernels.transform.ref import AMP_1AXIS, MAT
+
+    np.testing.assert_allclose(MAT @ MAT.T, np.eye(4), atol=1e-15)
+    assert abs(AMP_1AXIS - np.abs(MAT).sum(axis=0).max()) < 1e-15
 
 
 @pytest.mark.parametrize("shape", [(300, 96), (512, 128), (64, 64), (33, 200)])

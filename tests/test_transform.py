@@ -1,0 +1,206 @@
+"""Transform-coding subsystem invariants (core/transform.py):
+
+  * absolute error bound holds across shapes/dtypes/distributions/modes;
+  * the v3 container self-describes (parse_header tag, decompress dispatch);
+  * select_pipeline picks the transform coder on oscillatory data and the
+    hybrid sz3_auto engine mixes families per chunk;
+  * device (Pallas, force mode) and host paths both honour the bound;
+  * non-finite values, empty/0-d arrays, and frame streams survive.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AUTO_CANDIDATES,
+    ChunkedCompressor,
+    CompressionConfig,
+    ErrorBoundMode,
+    PIPELINES,
+    TransformCompressor,
+    decompress,
+    metrics,
+    parse_header,
+    select_pipeline,
+    sz3_auto,
+    sz3_transform,
+)
+from repro.core.chunking import decompress_chunk, frames_to_blob, compress_stream
+
+
+def _osc(n, dtype=np.float32):
+    t = np.arange(n, dtype=np.float64)
+    return (np.sin(0.93 * np.pi * t) + 0.1 * np.sin(2e-4 * t)).astype(dtype)
+
+
+def _smooth(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# error bound + container round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4096,), (61, 67), (17, 9, 23)])
+@pytest.mark.parametrize("eb", [1e-1, 1e-3, 1e-5])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_transform_bound_abs(shape, eb, dtype):
+    x = _smooth(shape, seed=hash(shape) % 100, dtype=dtype)
+    res = sz3_transform().compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb))
+    xhat = decompress(res.blob)
+    assert xhat.shape == x.shape and xhat.dtype == x.dtype
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_transform_bound_rel(eb):
+    x = _osc(20000) * 37.0
+    res = sz3_transform().compress(x, CompressionConfig(mode=ErrorBoundMode.REL, eb=eb))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(x, xhat) <= eb * float(x.max() - x.min()) * (1 + 1e-9)
+
+
+def test_transform_header_tag_and_dispatch():
+    x = _smooth((512,))
+    res = sz3_transform().compress(x, CompressionConfig(eb=1e-3))
+    header, _ = parse_header(res.blob)
+    assert header["v"] == 3
+    assert header["kind"] == "transform"
+    assert header["spec"]["kind"] == "transform"
+    assert header["spec"]["block"] == 4
+    # the generic entry point must auto-detect the v3 container
+    assert decompress(res.blob).shape == x.shape
+
+
+def test_transform_registered_pipeline():
+    assert "sz3_transform" in PIPELINES and "sz3_auto" in PIPELINES
+    comp = PIPELINES["sz3_transform"]()
+    assert isinstance(comp, TransformCompressor)
+
+
+@pytest.mark.parametrize(
+    "arr",
+    [
+        np.zeros(0, np.float32),
+        np.float32(3.25),
+        np.full((5, 5), 7.0, np.float32),
+        np.array([np.nan, 1.0, np.inf, -2.0] * 10, np.float32),
+    ],
+    ids=["empty", "scalar", "constant", "nonfinite"],
+)
+def test_transform_edge_inputs(arr):
+    a = np.asarray(arr)
+    res = sz3_transform().compress(a, CompressionConfig(eb=1e-3))
+    back = decompress(res.blob)
+    assert back.shape == a.shape
+    fin = np.isfinite(a)
+    if a.size:
+        assert np.allclose(np.asarray(back)[fin], a[fin], atol=1e-3)
+        # non-finite points ride the fail channel exactly
+        assert np.array_equal(np.asarray(back)[~fin], a[~fin], equal_nan=True)
+
+
+def test_transform_bound_survives_output_dtype_rounding():
+    """Regression: when the error bound is below the float32 ulp of the data,
+    the cast back onto the storage grid is itself a bound hazard — compress
+    must verify the POST-cast reconstruction and fail-channel the rest."""
+    rng = np.random.default_rng(0)
+    x = np.clip(192 + rng.standard_normal(8192) * 20, 129, 255).astype(np.float32)
+    eb = 1.5e-5  # < float32 ulp (1.526e-5) in [128, 256)
+    res = sz3_transform().compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb))
+    xhat = decompress(res.blob)
+    assert metrics.max_abs_error(x, xhat) <= eb * (1 + 1e-9)
+
+
+def test_transform_integer_input_casts():
+    x = np.arange(4096, dtype=np.int32)
+    res = sz3_transform().compress(x, CompressionConfig(eb=1e-2))
+    back = decompress(res.blob)
+    assert back.dtype == np.float32
+    assert np.abs(back.astype(np.float64) - x).max() <= 1e-2 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# online prediction-vs-transform selection (the SZ/ZFP criterion)
+# ---------------------------------------------------------------------------
+
+def test_select_pipeline_prefers_transform_on_oscillatory():
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    winner, scores = select_pipeline(_osc(32768), 1e-3, conf, AUTO_CANDIDATES)
+    assert winner == "sz3_transform", scores
+    # and prediction keeps winning its home turf (a very smooth field, where
+    # interpolation/Lorenzo residuals are near-zero but every transform
+    # coefficient still spans several bitplanes)
+    verysmooth = (np.sin(2e-4 * np.arange(32768)) * 10).astype(np.float32)
+    winner2, scores2 = select_pipeline(verysmooth, 1e-3, conf, AUTO_CANDIDATES)
+    assert winner2 != "sz3_transform", scores2
+
+
+def test_auto_chunked_mixes_families_and_bounds():
+    """The acceptance fixture: a smooth+oscillatory concatenation must route
+    at least one chunk to the transform coder and stay in bound."""
+    data = np.concatenate([_smooth((32768,), seed=5), _osc(32768)])
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-4)
+    res = sz3_auto(chunk_bytes=32768 * 4).compress(data, conf, with_stats=True)
+    picked = [c["pipeline"] for c in res.meta["chunks"]]
+    assert "sz3_transform" in picked, picked
+    assert any(p != "sz3_transform" for p in picked), picked
+    xhat = decompress(res.blob)
+    bound = 1e-4 * float(data.max() - data.min())
+    assert np.abs(xhat.astype(np.float64) - data).max() <= bound * (1 + 1e-9)
+
+
+def test_auto_container_random_access_and_frames():
+    data = np.concatenate([_smooth((16384,), seed=7), _osc(16384)])
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    eng = sz3_auto(chunk_bytes=16384 * 4)
+    blob = eng.compress(data, conf).blob
+    header, _ = parse_header(blob)
+    # per-chunk random access decodes transform chunks standalone
+    parts = [decompress_chunk(blob, i) for i in range(len(header["chunks"]))]
+    np.testing.assert_array_equal(np.concatenate(parts), decompress(blob))
+    # frame streams recover the transform pipeline name from the v3 spec
+    frames = list(compress_stream(data, conf, candidates=AUTO_CANDIDATES, chunk_bytes=16384 * 4))
+    re_blob = frames_to_blob(frames)
+    h2, _ = parse_header(re_blob)
+    assert [c["pipeline"] for c in h2["chunks"]] == [c["pipeline"] for c in header["chunks"]]
+    assert re_blob == blob
+
+
+def test_transform_estimate_error_currency():
+    """The cost model returns bits/element comparable across families: near
+    zero on trivially compressible data, large on incompressible noise."""
+    conf = CompressionConfig()
+    comp = sz3_transform()
+    low = comp.estimate_error(np.zeros(4096, np.float32), 1e-3, conf)
+    rng = np.random.default_rng(0)
+    high = comp.estimate_error(rng.standard_normal(4096).astype(np.float32), 1e-6, conf)
+    assert 0.0 <= low < 1.0
+    assert high > 5.0
+
+
+# ---------------------------------------------------------------------------
+# device path (Pallas kernels, interpret mode via device="force")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8192,), (64, 256)])
+def test_transform_device_force_bound_and_selfdescribing(shape):
+    x = _smooth(shape, seed=11)
+    comp = TransformCompressor(device="force")
+    res = comp.compress(x, CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3))
+    header, _ = parse_header(res.blob)
+    assert header["meta"].get("device") == 1, "kernel path not engaged"
+    xhat = decompress(res.blob)  # fresh entry point, host inverse on CPU
+    assert metrics.max_abs_error(x, xhat) <= 1e-3 * (1 + 1e-9)
+
+
+def test_transform_device_off_matches_host_bound():
+    x = _osc(8192)
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-4)
+    b_off = TransformCompressor(device="off").compress(x, conf).blob
+    h, _ = parse_header(b_off)
+    assert "device" not in (h["meta"] or {})
+    assert metrics.max_abs_error(x, decompress(b_off)) <= 1e-4 * (1 + 1e-9)
