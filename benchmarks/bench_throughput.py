@@ -27,11 +27,14 @@ from repro.core import (
     decompress,
     encoders,
     lossless,
+    metrics,
     sz3_auto,
     sz3_chunked,
     sz3_interp,
     sz3_lorenzo,
     sz3_lr,
+    sz3_pwr,
+    sz3_quality,
     sz3_transform,
     sz3_truncation,
 )
@@ -166,6 +169,48 @@ def transform_rows(full: bool = False, seed: int = 3):
     }
 
 
+def quality_rows(full: bool = False, seed: int = 3):
+    """Quality-targeted controller + pointwise-relative pipeline health.
+
+    Fixed seeds make every number data-deterministic, so check_regression.py
+    can gate them as ABSOLUTE criteria (achieved PSNR within tolerance of the
+    target; pointwise bound + exact zeros hold) on any machine.
+    """
+    target = 60.0
+    shape = (512, 128, 32) if full else (192, 96, 32)
+    rng = np.random.default_rng(seed)
+    data = np.cumsum(rng.standard_normal(shape).astype(np.float32), axis=0)
+    mb = data.nbytes / 1e6
+    q = sz3_quality(target_psnr=target, chunk_bytes=1 << 20)
+    t_enc, res = _best(lambda: q.compress(data), repeats=1)
+    xhat = decompress(res.blob)
+    achieved = metrics.psnr(data, xhat)
+    # pointwise-relative: lognormal magnitudes with signs + exact zeros —
+    # the workload REL's absmax fallback used to butcher
+    pwr_eb = 1e-3
+    vals = np.exp(rng.normal(0, 4, (1 << 19 if full else 1 << 17,))).astype(np.float64)
+    vals[rng.random(vals.size) < 0.3] *= -1
+    vals[rng.random(vals.size) < 0.01] = 0.0
+    comp_p = sz3_pwr(eb=pwr_eb, chunk_bytes=1 << 20)
+    t_pwr, res_p = _best(lambda: comp_p.compress(vals), repeats=1)
+    vhat = decompress(res_p.blob)
+    nz = vals != 0
+    max_rel = float(np.abs((vhat[nz] - vals[nz]) / vals[nz]).max())
+    return {
+        "target_psnr": target,
+        "achieved_psnr": round(float(achieved), 2),
+        "psnr_within_tol": float(target - 1.0 <= achieved <= target + 1.0),
+        "ratio_at_target": round(res.ratio, 2),
+        "controller_MBps": round(mb / t_enc, 1),
+        "pwr_eb": pwr_eb,
+        "pwr_max_rel": max_rel,
+        "pwr_bound_ok": float(max_rel <= pwr_eb * (1 + 1e-9)),
+        "pwr_zeros_exact": float(np.all(vhat[~nz] == 0.0)),
+        "pwr_ratio": round(res_p.ratio, 2),
+        "pwr_MBps": round(vals.nbytes / 1e6 / t_pwr, 1),
+    }
+
+
 def perf_rows(full: bool = False):
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
@@ -173,6 +218,7 @@ def perf_rows(full: bool = False):
         "huffman": huffman_rows(full),
         "chunked_workers": chunked_rows(full),
         "transform": transform_rows(full),
+        "quality": quality_rows(full),
     }
 
 

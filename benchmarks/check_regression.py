@@ -31,6 +31,29 @@ GUARDED = [
     (("transform", "bound_ok"), "transform round-trip within error bound"),
 ]
 
+#: ABSOLUTE gates on the candidate artifact (no baseline needed — the bench
+#: fixtures are seed-deterministic, so these are pass/fail criteria, not
+#: machine-relative speedups).  (path, label, check(value, perf) -> ok)
+QUALITY_GATES = [
+    (
+        ("quality", "achieved_psnr"),
+        "quality-targeted achieved PSNR within [target-1, target+1] dB",
+        lambda v, perf: perf["quality"]["target_psnr"] - 1.0
+        <= v
+        <= perf["quality"]["target_psnr"] + 1.0,
+    ),
+    (
+        ("quality", "pwr_bound_ok"),
+        "pointwise-relative bound holds for every nonzero element",
+        lambda v, perf: v >= 1.0,
+    ),
+    (
+        ("quality", "pwr_zeros_exact"),
+        "pointwise-relative zeros reconstruct exactly",
+        lambda v, perf: v >= 1.0,
+    ),
+]
+
 
 def _perf_of(doc):
     """Accept either a bare perf dict, a bench_throughput result, or a
@@ -87,8 +110,24 @@ def main(argv=None) -> int:
         print(f"{status:10s} {label}: baseline {b:.2f} candidate {c:.2f} floor {floor:.2f}")
         if c < floor:
             failures.append(label)
+    quality_failures = []
+    for path, label, check in QUALITY_GATES:
+        c = _get(cand, path)
+        if c is None:
+            print(f"SKIP {label}: metric missing from candidate")
+            continue
+        ok = check(c, cand)
+        print(f"{'ok' if ok else 'FAILED':10s} {label}: candidate {c:.2f}")
+        if not ok:
+            quality_failures.append(label)
     if failures:
         print(f"FAILED: {len(failures)} metric(s) regressed >30%: {failures}")
+    if quality_failures:
+        print(
+            f"FAILED: {len(quality_failures)} absolute quality criteria not "
+            f"met: {quality_failures}"
+        )
+    if failures or quality_failures:
         return 1
     print("throughput regression gate passed")
     return 0

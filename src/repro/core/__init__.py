@@ -26,6 +26,7 @@ from .pipeline import (  # noqa: I001  (chunking must import after pipeline)
 from . import chunking
 from .chunking import (
     ChunkedCompressor,
+    PWRelChunkedCompressor,
     compress_stream,
     decompress_chunk,
     decompress_stream,
@@ -33,6 +34,7 @@ from .chunking import (
     read_frames,
     select_pipeline,
     sz3_chunked,
+    sz3_pwr,
     write_frames,
 )
 from . import transform
@@ -41,6 +43,13 @@ from .transform import (  # noqa: I001  (transform must import after chunking)
     TransformCompressor,
     sz3_auto,
     sz3_transform,
+)
+from . import quality
+from .quality import (  # noqa: I001  (quality must import after transform)
+    QualityCompressor,
+    QualityTarget,
+    achieved_quality,
+    sz3_quality,
 )
 
 __all__ = [
@@ -62,7 +71,14 @@ __all__ = [
     "sz3_pastri",
     "sz3_aps",
     "ChunkedCompressor",
+    "PWRelChunkedCompressor",
     "sz3_chunked",
+    "sz3_pwr",
+    "QualityCompressor",
+    "QualityTarget",
+    "achieved_quality",
+    "sz3_quality",
+    "quality",
     "TransformCompressor",
     "sz3_transform",
     "sz3_auto",

@@ -58,11 +58,13 @@ import msgpack
 import numpy as np
 
 from . import pipeline as pl_mod
+from . import preprocess as pre_mod
 from .config import CompressionConfig, ErrorBoundMode
 from .pipeline import CompressionResult, pack_container
 
 _STREAM_MAGIC = b"SZ3S"
 _VERSION2 = 2
+_VERSION4 = 4  # pointwise-relative multi-chunk container (kind "pwr")
 
 #: default contest entrants: the three §6.2 pipelines with distinct strengths
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("sz3_lorenzo", "sz3_lr", "sz3_interp")
@@ -241,20 +243,25 @@ def select_pipeline(
 
 @dataclasses.dataclass
 class ChunkRecord:
-    """Header entry for one chunk of a v2 container."""
+    """Header entry for one chunk of a v2/v4 container."""
 
     off: int  # byte offset of the chunk's v1 blob within the body
     length: int
     n0: int  # extent along the chunk axis
     pipeline: str  # winning candidate name (observability; blob self-describes)
+    extra: Optional[Dict[str, Any]] = None  # e.g. the quality controller's
+    # per-chunk achieved record; readers that predate it ignore the key
 
     def to_header(self) -> Dict[str, Any]:
-        return {
+        h = {
             "off": int(self.off),
             "len": int(self.length),
             "n0": int(self.n0),
             "pipeline": self.pipeline,
         }
+        if self.extra:
+            h["q"] = pl_mod._clean_meta(self.extra)
+        return h
 
 
 class ChunkedCompressor:
@@ -262,9 +269,11 @@ class ChunkedCompressor:
 
     Drives each chunk through the existing Algorithm-1 driver of the winning
     candidate; emits the v2 multi-chunk container (or a frame stream).
+    PW_REL configs are honoured natively (log-composed chunk pipelines).
     """
 
     kind = "chunked"
+    container_version = _VERSION2
 
     def __init__(
         self,
@@ -279,6 +288,23 @@ class ChunkedCompressor:
         self.workers = max(1, int(workers))
 
     # -- shared per-chunk path ----------------------------------------------
+    def _pwr_candidates(self) -> Tuple[str, ...]:
+        """Candidates usable under PW_REL: Algorithm-1 pipelines only (they
+        accept a preprocessor slot to compose LogTransform into; whole-
+        pipeline coders like the transform family and truncation have no
+        log-domain composition and are dropped from the contest).  The
+        filter depends only on the candidate names, so it is computed once
+        per engine, not per chunk."""
+        cached = getattr(self, "_pwr_cands", None)
+        if cached is None:
+            cached = tuple(
+                n
+                for n in self.candidates
+                if hasattr(_make_pipeline(n), "preprocessor")
+            ) or ("sz3_lorenzo",)
+            self._pwr_cands = cached
+        return cached
+
     def _compress_chunk(
         self, chunk: np.ndarray, abs_eb: float, eff: CompressionConfig
     ) -> Tuple[bytes, str, int]:
@@ -287,13 +313,32 @@ class ChunkedCompressor:
         each task builds its own (construction is a few object allocations —
         the expensive per-chunk state, e.g. Huffman decode tables, is cached
         at module level in encoders.py).  This is what makes parallel output
-        byte-identical to serial: the function is pure in (chunk, eff)."""
+        byte-identical to serial: the function is pure in (chunk, eff).
+
+        PW_REL chunks compose ``preprocess.LogTransform`` into the winning
+        Algorithm-1 pipeline: selection scores the log-domain view of the
+        chunk against the log-domain ABS bound (exactly what the predictor
+        will see), and the emitted v1 blob carries the chunk's sign / zero /
+        non-finite side channels in its ``pre_meta`` — every chunk stays
+        independently decodable through the ordinary v1 path."""
+        n0 = int(chunk.shape[0] if chunk.ndim else chunk.size)
+        if eff.mode == ErrorBoundMode.PW_REL:
+            cands = self._pwr_candidates()
+            pipelines = {name: _make_pipeline(name) for name in cands}
+            sel_conf = eff.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
+            name, _scores = select_pipeline(
+                pre_mod.log_domain_view(chunk), abs_eb, sel_conf, cands,
+                pipelines=pipelines,
+            )
+            comp = pipelines[name]
+            comp.preprocessor = pre_mod.LogTransform()
+            return comp.compress(chunk, eff).blob, name, n0
         pipelines = {name: _make_pipeline(name) for name in self.candidates}
         name, _scores = select_pipeline(
             chunk, abs_eb, eff, self.candidates, pipelines=pipelines
         )
         blob = pipelines[name].compress(chunk, eff).blob
-        return blob, name, int(chunk.shape[0] if chunk.ndim else chunk.size)
+        return blob, name, n0
 
     def _chunk_frames(
         self, data: np.ndarray, conf: CompressionConfig
@@ -302,12 +347,18 @@ class ChunkedCompressor:
         data = np.asarray(data)
         if data.dtype not in (np.float32, np.float64):
             data = data.astype(np.float32)
-        rng = float(data.max() - data.min()) if data.size else 0.0
-        absmax = float(np.abs(data).max()) if data.size else 0.0
-        abs_eb = conf.resolve_abs_eb(rng, absmax)
-        if abs_eb <= 0:
-            abs_eb = float(np.finfo(np.float64).tiny)
-        eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
+        if conf.mode == ErrorBoundMode.PW_REL:
+            # the pointwise bound needs no global statistics: the log-domain
+            # ABS bound depends only on eb, so chunked PW_REL output honours
+            # the bound identically for arrays and unbounded slab iterators
+            abs_eb = pre_mod.pw_rel_log_eb(conf.eb)
+            eff = conf
+        else:
+            rng, absmax = pl_mod._finite_stats(data)
+            abs_eb = conf.resolve_abs_eb(rng, absmax)
+            if abs_eb <= 0:
+                abs_eb = float(np.finfo(np.float64).tiny)
+            eff = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
         flat_leading = data.reshape(-1) if data.ndim == 0 else data
         chunks = (
             flat_leading[sl]
@@ -341,7 +392,8 @@ class ChunkedCompressor:
             body_parts.append(blob)
             off += len(blob)
         blob = _assemble_v2(
-            tuple(data.shape), stored_dtype, records, body_parts, conf
+            tuple(data.shape), stored_dtype, records, body_parts, conf,
+            kind=self.kind, version=self.container_version,
         )
         meta = {"chunks": [r.to_header() for r in records]}
         # ratio against POST-cast bytes, matching the v1 driver's accounting
@@ -359,10 +411,18 @@ def _assemble_v2(
     records: Sequence[ChunkRecord],
     body_parts: Sequence[bytes],
     conf: CompressionConfig,
+    kind: str = "chunked",
+    version: int = _VERSION2,
+    header_extra: Optional[Dict[str, Any]] = None,
 ) -> bytes:
+    """Assemble a multi-chunk container.  ``kind``/``version`` distinguish the
+    generations sharing this layout: v2 "chunked" (ABS/REL) and v4 "pwr"
+    (pointwise-relative, log-composed chunk blobs).  ``header_extra`` merges
+    additional top-level header fields (e.g. the quality controller's
+    achieved-quality summary); unknown fields are ignored by readers."""
     header = {
-        "v": _VERSION2,
-        "kind": "chunked",
+        "v": int(version),
+        "kind": kind,
         "shape": list(shape),
         "dtype": np.dtype(dtype).str,
         "axis": 0,
@@ -370,6 +430,8 @@ def _assemble_v2(
         "eb": float(conf.eb),
         "chunks": [r.to_header() for r in records],
     }
+    if header_extra:
+        header.update(pl_mod._clean_meta(header_extra))
     return pack_container(header, b"".join(body_parts))
 
 
@@ -409,10 +471,10 @@ def decompress_chunked(
 
 
 def decompress_chunk(blob: bytes, index: int) -> np.ndarray:
-    """Random access: decode only chunk ``index`` of a v2 container."""
+    """Random access: decode only chunk ``index`` of a v2/v4 container."""
     header, body_off = pl_mod.parse_header(blob)
-    if header.get("v", 1) < _VERSION2 or header.get("kind") != "chunked":
-        raise ValueError("not a chunked (v2) container")
+    if header.get("v", 1) < _VERSION2 or header.get("kind") not in ("chunked", "pwr"):
+        raise ValueError("not a chunked (v2) or pwr (v4) container")
     c = header["chunks"][index]
     return pl_mod.decompress(
         blob[body_off + c["off"] : body_off + c["off"] + c["len"]]
@@ -508,7 +570,12 @@ def frames_to_blob(frames: Iterable[bytes]) -> bytes:
         off += len(frame)
         shape0 += n0
     conf = CompressionConfig(mode=ErrorBoundMode(mode), eb=1e-3 if eb is None else eb)
-    return _assemble_v2((shape0,) + (inner or ()), dtype, records, parts, conf)
+    pwr = conf.mode == ErrorBoundMode.PW_REL
+    return _assemble_v2(
+        (shape0,) + (inner or ()), dtype, records, parts, conf,
+        kind="pwr" if pwr else "chunked",
+        version=_VERSION4 if pwr else _VERSION2,
+    )
 
 
 def _pipeline_name_from_spec(spec: Dict[str, Any]) -> str:
@@ -566,6 +633,73 @@ def sz3_chunked(
     )
 
 
+# ---------------------------------------------------------------------------
+# first-class pointwise-relative pipeline (v4 container)
+# ---------------------------------------------------------------------------
+
+class PWRelChunkedCompressor(ChunkedCompressor):
+    """Pointwise-relative chunked engine: ``|x_i - x_hat_i| <= eb * |x_i|``
+    holds for every finite nonzero element, zeros reconstruct exactly, and
+    non-finite values round-trip bit-exact — NOT the conservative
+    ``eb * absmax`` over-bound the bare pipelines used to degrade to.
+
+    Each chunk is compressed by the winning Algorithm-1 pipeline composed
+    with ``preprocess.LogTransform`` (per-chunk sign / zero / non-finite side
+    channels travel in the chunk blob's ``pre_meta``), and the container
+    carries the v4 "pwr" tag so ``pipeline.decompress`` can route it; v1-v3
+    containers decode unchanged."""
+
+    kind = "pwr"
+    container_version = _VERSION4
+
+    def __init__(
+        self,
+        candidates: Sequence[str] = DEFAULT_CANDIDATES,
+        chunk_bytes: int = 1 << 22,
+        conf: Optional[CompressionConfig] = None,
+        workers: int = 1,
+    ):
+        super().__init__(
+            candidates=candidates,
+            chunk_bytes=chunk_bytes,
+            conf=conf or CompressionConfig(mode=ErrorBoundMode.PW_REL, eb=1e-3),
+            workers=workers,
+        )
+
+    def compress(
+        self,
+        data: np.ndarray,
+        conf: Optional[CompressionConfig] = None,
+        with_stats: bool = False,
+    ) -> CompressionResult:
+        conf = conf or self.conf
+        if conf.mode != ErrorBoundMode.PW_REL:
+            raise ValueError(
+                "sz3_pwr compresses pointwise-relative bounds only; got mode "
+                f"{conf.mode.value!r} (use sz3_chunked/sz3_auto for ABS/REL)"
+            )
+        return super().compress(data, conf, with_stats)
+
+
+def sz3_pwr(
+    eb: float = 1e-3,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    chunk_bytes: int = 1 << 22,
+    workers: int = 1,
+    **kw,
+) -> PWRelChunkedCompressor:
+    """First-class pointwise-relative pipeline (v4 "pwr" container)."""
+    return PWRelChunkedCompressor(
+        candidates=candidates,
+        chunk_bytes=chunk_bytes,
+        workers=workers,
+        conf=kw.pop("conf", None)
+        or CompressionConfig(mode=ErrorBoundMode.PW_REL, eb=eb),
+        **kw,
+    )
+
+
 # register with the named-pipeline table (PIPELINES lives in pipeline.py;
 # chunking imports pipeline, so registration happens here to avoid a cycle)
 pl_mod.PIPELINES["sz3_chunked"] = sz3_chunked
+pl_mod.PIPELINES["sz3_pwr"] = sz3_pwr

@@ -62,19 +62,38 @@ class CompressionConfig:
     sample_stride: int = 3
     extras: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
-    def resolve_abs_eb(self, value_range: float, value_absmax: float) -> float:
+    def resolve_abs_eb(
+        self,
+        value_range: float,
+        value_absmax: float,
+        allow_conservative: bool = False,
+    ) -> float:
         """Translate the configured bound into an absolute bound.
 
-        REL bounds scale by value range (SZ convention).  PW_REL is handled by
-        the log-transform preprocessor which converts the problem into an ABS
-        problem in the log domain; when asked directly we fall back to a
-        conservative absolute bound (eb * absmax) so bare pipelines stay safe.
+        REL bounds scale by value range (SZ convention).  PW_REL has no
+        faithful single absolute bound — it is realized by the log-transform
+        preprocessor, which converts the problem into an ABS problem in the
+        log domain (PW_REL-native pipelines: ``sz3_pwr``, the chunked/auto
+        engines, or any ``SZ3Compressor`` composed with
+        ``preprocess.LogTransform``).  Resolving PW_REL here therefore raises,
+        unless the caller explicitly opts into the conservative ``eb * absmax``
+        over-bound with ``allow_conservative=True`` (every point then satisfies
+        an ABS bound that only equals the pointwise-relative bound at the
+        largest-magnitude value — far looser everywhere else).
         """
         if self.mode == ErrorBoundMode.ABS:
             return float(self.eb)
         if self.mode == ErrorBoundMode.REL:
             return float(self.eb) * float(value_range)
         if self.mode == ErrorBoundMode.PW_REL:
+            if not allow_conservative:
+                raise ValueError(
+                    "PW_REL cannot be resolved to a single absolute bound; "
+                    "use a PW_REL-native pipeline (sz3_pwr, sz3_chunked, "
+                    "sz3_auto, or compose preprocess.LogTransform into an "
+                    "SZ3Compressor), or opt into the conservative eb*absmax "
+                    "fallback with allow_conservative=True"
+                )
             return float(self.eb) * float(value_absmax)
         raise ValueError(f"unknown error bound mode {self.mode}")
 

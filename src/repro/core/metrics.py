@@ -58,27 +58,42 @@ def max_pw_rel_error(original, decompressed, eps: float = 0.0) -> float:
 
 def mse(original, decompressed) -> float:
     a, b = _np(original).astype(np.float64), _np(decompressed).astype(np.float64)
+    if a.size == 0:
+        return 0.0  # vacuous: no points, no error (np.mean would warn + nan)
     return float(np.mean((a - b) ** 2))
 
 
 def psnr(original, decompressed) -> float:
-    """Peak signal-to-noise ratio w.r.t. the data value range (SZ convention)."""
+    """Peak signal-to-noise ratio w.r.t. the data value range (SZ convention).
+
+    Degenerate inputs stay warning-free and nan-free: empty or exactly
+    reconstructed data is ``inf``; a constant array (value range 0) that is
+    NOT exactly reconstructed has no meaningful range-referenced PSNR, so the
+    error power alone is reported (``-10 log10(mse)``), still finite.
+    """
     a = _np(original).astype(np.float64)
-    rng = float(a.max() - a.min())
+    if a.size == 0:
+        return float("inf")
     m = mse(original, decompressed)
     if m == 0:
         return float("inf")
+    rng = float(a.max() - a.min())
     if rng == 0:
-        return float("inf") if m == 0 else -10.0 * np.log10(m)
-    return 20.0 * np.log10(rng) - 10.0 * np.log10(m)
+        return -10.0 * float(np.log10(m))
+    return 20.0 * float(np.log10(rng)) - 10.0 * float(np.log10(m))
 
 
 def nrmse(original, decompressed) -> float:
+    """Range-normalized RMSE; 0.0 for empty or constant-and-exact inputs
+    (the range-0 normalization would otherwise emit a divide warning + nan)."""
     a = _np(original).astype(np.float64)
+    if a.size == 0:
+        return 0.0
+    m = mse(original, decompressed)
     rng = float(a.max() - a.min())
     if rng == 0:
-        return 0.0
-    return float(np.sqrt(mse(original, decompressed)) / rng)
+        return 0.0 if m == 0 else float("inf")
+    return float(np.sqrt(m) / rng)
 
 
 def value_range(x) -> float:

@@ -21,6 +21,10 @@ so ``decompress(blob)`` rebuilds the exact pipeline.  Named factory pipelines:
                     bitplane coding (registered by transform.py; v3 header)
   sz3_auto        — chunked engine whose candidate set spans BOTH coder
                     families (prediction + transform; transform.py)
+  sz3_pwr         — first-class pointwise-relative engine: log-composed
+                    chunk pipelines, v4 container (chunking.py)
+  sz3_quality     — closed-loop quality-targeted rate controller
+                    (target PSNR / ratio / bitrate; quality.py)
 """
 from __future__ import annotations
 
@@ -39,6 +43,21 @@ from .config import CompressionConfig, ErrorBoundMode
 
 _MAGIC = b"SZ3J"
 _VERSION = 1
+
+
+def _finite_stats(data: np.ndarray) -> Tuple[float, float]:
+    """(value range, abs max) over FINITE elements — a stray nan/inf must
+    not blow a REL bound up to nan for every other point.  Cheap common
+    path: one min/max pass; the masked pass only runs when needed."""
+    if not data.size:
+        return 0.0, 0.0
+    mn, mx = float(data.min()), float(data.max())
+    if not (np.isfinite(mn) and np.isfinite(mx)):
+        fin = data[np.isfinite(data)]
+        if not fin.size:
+            return 0.0, 0.0
+        mn, mx = float(fin.min()), float(fin.max())
+    return mx - mn, max(abs(mn), abs(mx))
 
 
 def _clean_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
@@ -130,8 +149,7 @@ class SZ3Compressor:
         if data.dtype not in (np.float32, np.float64):
             data = data.astype(np.float32)
         pdata, conf2, pre_meta = self.preprocessor.forward(data, conf)  # line 1
-        rng = float(pdata.max() - pdata.min()) if pdata.size else 0.0
-        absmax = float(np.abs(pdata).max()) if pdata.size else 0.0
+        rng, absmax = _finite_stats(pdata)
         abs_eb = conf2.resolve_abs_eb(rng, absmax)
         if abs_eb <= 0:
             abs_eb = np.finfo(np.float64).tiny
@@ -197,12 +215,15 @@ def parse_header(blob: bytes) -> Tuple[Dict[str, Any], int]:
 def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     """Self-describing decompression — rebuilds the pipeline from the header.
 
-    Handles both container generations: v1 single-pipeline blobs and v2
-    multi-chunk blobs (per-chunk spec + offsets; see chunking.py).
-    ``workers`` parallelizes v2 multi-chunk decode (ignored for v1 blobs).
+    Handles every container generation: v1 single-pipeline blobs, v2
+    multi-chunk blobs (per-chunk spec + offsets; see chunking.py), v3
+    blockwise-transform blobs, and v4 pointwise-relative multi-chunk blobs
+    (kind "pwr": chunk blobs carry log-domain side channels in their
+    pre_meta).  ``workers`` parallelizes multi-chunk decode (ignored for
+    single-pipeline blobs).
     """
     header, body_off = parse_header(blob)
-    if header.get("v", _VERSION) >= 2 and header.get("kind") == "chunked":
+    if header.get("v", _VERSION) >= 2 and header.get("kind") in ("chunked", "pwr"):
         from .chunking import decompress_chunked  # local: avoids import cycle
 
         return decompress_chunked(blob, header, body_off, workers=workers)
@@ -321,8 +342,7 @@ class AdaptiveAPSCompressor:
     def compress(self, data, conf: CompressionConfig = None, with_stats=False):
         conf = conf or CompressionConfig()
         data = np.asarray(data)
-        rng = float(data.max() - data.min()) if data.size else 0.0
-        absmax = float(np.abs(data).max()) if data.size else 0.0
+        rng, absmax = _finite_stats(data)
         abs_eb = conf.resolve_abs_eb(rng, absmax)
         if abs_eb < self.threshold:
             # restricted quantization bin: integer-valued data becomes

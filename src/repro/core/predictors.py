@@ -142,13 +142,16 @@ def _regression_fit(
     axes = tuple(range(1, nd + 1))
     cs = reg._coords(b, nd)
     denom = (b**nd) * ((b * b - 1) / 12.0)
-    coeffs = [blocks.mean(axis=axes)]
-    pred = coeffs[0].reshape((-1,) + (1,) * nd)
-    for k in range(nd):
-        beta = (blocks * cs[k]).sum(axis=axes) / denom
-        coeffs.append(beta)
-        pred = pred + beta.reshape((-1,) + (1,) * nd) * cs[k]
-    return np.abs(blocks - pred).reshape(-1), coeffs
+    # nan/inf blocks produce nan residuals/coefficients by design (estimation
+    # only — such points ride the unpredictable fail path when coding)
+    with np.errstate(invalid="ignore", over="ignore"):
+        coeffs = [blocks.mean(axis=axes)]
+        pred = coeffs[0].reshape((-1,) + (1,) * nd)
+        for k in range(nd):
+            beta = (blocks * cs[k]).sum(axis=axes) / denom
+            coeffs.append(beta)
+            pred = pred + beta.reshape((-1,) + (1,) * nd) * cs[k]
+        return np.abs(blocks - pred).reshape(-1), coeffs
 
 
 def regression_bits(
@@ -954,10 +957,14 @@ class CompositePredictor(Predictor):
         beta0 = blocks.mean(axis=axes)
         betas = [(blocks * cs[k]).sum(axis=axes) / denom for k in range(nd)]
         qhat, coef_q = [], []
-        for vals, ceb in [(beta0, eb / 2.0)] + [(bt, eb / (2.0 * b)) for bt in betas]:
-            qc = np.rint(vals / (2.0 * ceb)).astype(np.int64)
-            coef_q.append(qc)
-            qhat.append(qc.astype(np.float64) * (2.0 * ceb))
+        # non-finite block means (nan/inf inputs) quantize to garbage here by
+        # design — those blocks lose the contest or their points ride the
+        # unpredictable fail path, so the cast is safe and warning-worthless
+        with np.errstate(invalid="ignore", over="ignore"):
+            for vals, ceb in [(beta0, eb / 2.0)] + [(bt, eb / (2.0 * b)) for bt in betas]:
+                qc = np.rint(vals / (2.0 * ceb)).astype(np.int64)
+                coef_q.append(qc)
+                qhat.append(qc.astype(np.float64) * (2.0 * ceb))
         pred_reg = qhat[0].reshape((nb,) + (1,) * nd)
         for k in range(nd):
             pred_reg = pred_reg + qhat[1 + k].reshape((nb,) + (1,) * nd) * cs[k]

@@ -87,13 +87,43 @@ class Linearize(Preprocessor):
         return data.reshape(tuple(meta["shape"]))
 
 
+def pw_rel_log_eb(eb: float) -> float:
+    """The ABS bound in the log2 domain equivalent to pointwise-relative ``eb``.
+
+    A log-domain error of delta reconstructs x * 2**delta; keeping
+    ``|delta| <= min(log2(1+eb), -log2(1-eb))`` keeps the multiplier inside
+    ``[1-eb, 1+eb]`` in BOTH directions (log2(1-eb) is the tighter side).
+    """
+    eb = float(eb)
+    if not (0.0 < eb < 1.0):
+        raise ValueError("pointwise-relative eb must be in (0, 1)")
+    return float(min(np.log2(1.0 + eb), -np.log2(1.0 - eb)))
+
+
+def log_domain_view(data: np.ndarray) -> np.ndarray:
+    """log2|x| with zeros / non-finite values mapped to 0.0 (= log2(1)).
+
+    The selection-time view of what :class:`LogTransform` will feed the
+    predictor: cheap pipeline contests for PW_REL chunks score THIS array
+    (side channels carry the masked points, so predictors never see them).
+    """
+    flat = np.asarray(data, np.float64)
+    mag = np.abs(flat)
+    safe = np.where(np.isfinite(flat) & (mag > 0), mag, 1.0)
+    return np.log2(safe)
+
+
 class LogTransform(Preprocessor):
     """Pointwise-relative error bounds via the logarithmic domain (ref [20]).
 
-    x -> log2|x|, compressed with abs bound eb' = log2(1 + eb) (so the
-    reconstructed ratio x_hat/x is within [1-eb, 1+eb]); signs are stored as a
-    packed bitmap and exact zeros / denormal-tiny values as an exact-positions
-    bitmap (reconstructed as 0, which satisfies any pointwise-relative bound).
+    x -> log2|x| in float64, compressed with the ABS bound
+    :func:`pw_rel_log_eb` (so the reconstructed ratio x_hat/x stays within
+    [1-eb, 1+eb] pointwise); signs are stored as a packed bitmap, exact zeros /
+    sub-threshold values as an exact-positions bitmap (reconstructed as 0,
+    which satisfies any pointwise-relative bound), and non-finite values
+    (nan/inf — log-undefined) ride an exact raw side channel, so the bound
+    definition holds for every finite nonzero point and everything else
+    round-trips exactly.
     """
 
     name = "log"
@@ -104,18 +134,34 @@ class LogTransform(Preprocessor):
     def forward(self, data, conf):
         if conf.mode != ErrorBoundMode.PW_REL:
             raise ValueError("LogTransform requires ErrorBoundMode.PW_REL")
-        flat = data.reshape(-1)
+        flat = np.asarray(data, np.float64).reshape(-1)
         thr = self.zero_threshold
-        zero_mask = np.abs(flat) <= thr
-        sign_mask = flat < 0
-        safe = np.where(zero_mask, 1.0, np.abs(flat))
-        logged = np.log2(safe).astype(data.dtype).reshape(data.shape)
-        # log2(1 - eb) is the tighter side; use it so both directions hold.
+        finite = np.isfinite(flat)
+        zero_mask = finite & (np.abs(flat) <= thr)
+        nonfinite_mask = ~finite
+        sign_mask = finite & (flat < 0)
+        masked = zero_mask | nonfinite_mask
+        safe = np.where(masked, 1.0, np.abs(flat))
+        # float64 log domain regardless of input dtype: |log2| reaches ~1024,
+        # where float32 resolution (~6e-5) would eat tight bounds
+        logged = np.log2(safe).reshape(data.shape)
+        # reserve headroom for the float rounding the log domain cannot see:
+        # decompression casts the float64 reconstruction back to the storage
+        # dtype (half-ulp relative error) and exp2 itself rounds once in
+        # float64 — without the reservation a reconstruction sitting exactly
+        # on the bound lands just past it after the cast
+        dt = data.dtype if data.dtype.kind == "f" else np.dtype(np.float32)
+        eps = float(np.finfo(dt).eps) / 2 + 2.0**-52
         eb = float(conf.eb)
-        if not (0.0 < eb < 1.0):
-            raise ValueError("pointwise-relative eb must be in (0, 1)")
-        abs_eb = min(np.log2(1.0 + eb), -np.log2(1.0 - eb))
-        new_conf = conf.replace(mode=ErrorBoundMode.ABS, eb=float(abs_eb))
+        eb_adj = (eb - eps) / (1.0 + eps)
+        if eb_adj <= 0:
+            raise ValueError(
+                f"pointwise-relative eb={eb:g} is below the {dt.name} "
+                f"rounding floor ({eps:.2e}); the bound cannot survive the "
+                "cast back to the storage dtype"
+            )
+        abs_eb = pw_rel_log_eb(eb_adj)
+        new_conf = conf.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
         meta = {
             "signs": np.packbits(sign_mask).tobytes(),
             "zeros": np.packbits(zero_mask).tobytes(),
@@ -123,6 +169,9 @@ class LogTransform(Preprocessor):
             "orig_mode": conf.mode.value,
             "orig_eb": float(conf.eb),
         }
+        if nonfinite_mask.any():
+            meta["nonfinite"] = np.packbits(nonfinite_mask).tobytes()
+            meta["nonfinite_vals"] = flat[nonfinite_mask].tobytes()
         return logged, new_conf, meta
 
     def inverse(self, data, conf, meta):
@@ -132,6 +181,11 @@ class LogTransform(Preprocessor):
         flat = np.exp2(data.reshape(-1).astype(np.float64))
         flat = np.where(signs, -flat, flat)
         flat = np.where(zeros, 0.0, flat)
+        if meta.get("nonfinite"):
+            nf = np.unpackbits(
+                np.frombuffer(meta["nonfinite"], np.uint8), count=n
+            ).astype(bool)
+            flat[nf] = np.frombuffer(meta["nonfinite_vals"], np.float64)
         return flat.astype(data.dtype).reshape(data.shape)
 
 

@@ -170,7 +170,10 @@ class QuantizerBase(abc.ABC):
         eb = self.eb
         x64 = np.asarray(x, np.float64)
         scaled = x64 / (2.0 * eb)
-        overflow = np.abs(scaled) >= float(_INT64_MAX // 2)
+        # non-finite inputs have no grid point; routing them through the fail
+        # channel stores them exactly (nan/inf round-trip bit-stable) instead
+        # of the nan->int64 cast clobbering them
+        overflow = ~np.isfinite(scaled) | (np.abs(scaled) >= float(_INT64_MAX // 2))
         q = np.rint(np.where(overflow, 0.0, scaled)).astype(np.int64)
         recon = (q.astype(np.float64) * (2.0 * eb)).astype(self._dtype)
         fail = overflow | (np.abs(recon.astype(np.float64) - x64) > eb)

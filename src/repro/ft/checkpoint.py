@@ -36,6 +36,7 @@ from ..core import (
     ChunkedCompressor,
     CompressionConfig,
     ErrorBoundMode,
+    QualityCompressor,
     decompress as sz3_decompress,
     sz3_lorenzo,
 )
@@ -72,8 +73,11 @@ def _byteunshuffle(raw: bytes, itemsize: int, nbytes: int) -> bytes:
 
 @dataclasses.dataclass(frozen=True)
 class LeafPolicy:
-    mode: str = "lossless"  # "lossless" | "lossy" | "raw"
+    mode: str = "lossless"  # "lossless" | "lossy" | "psnr" | "raw"
     rel_eb: float = 1e-4  # for lossy
+    target_psnr: float = 60.0  # for psnr: quality-targeted rate control —
+    # the leaf is stored at whatever error bound the closed-loop controller
+    # finds to hit the PSNR floor, instead of a hand-picked eb
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,13 +110,26 @@ def encode_leaf(
         "mode": pol.mode,
     }
     if (
-        pol.mode == "lossy"
+        pol.mode in ("lossy", "psnr")
         and arr.dtype in (np.float32, np.float64)
         and arr.size >= 1024
         and np.isfinite(arr).all()
         and float(arr.max() - arr.min()) > 0
     ):
         flat2d = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr
+        if pol.mode == "psnr":
+            # quality-targeted: the controller finds the bound per chunk;
+            # big leaves parallelize exactly like the chunked path
+            comp = QualityCompressor(
+                target_psnr=pol.target_psnr,
+                workers=(_CHUNK_WORKERS if workers is None else workers)
+                if arr.nbytes >= _CHUNKED_MIN_BYTES
+                else 1,
+            )
+            meta["codec"] = "sz3_psnr"
+            res = comp.compress(np.ascontiguousarray(flat2d))
+            meta["achieved_psnr"] = float(res.meta["quality"]["achieved_psnr"])
+            return res.blob, meta
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
         if arr.nbytes >= _CHUNKED_MIN_BYTES:
             # both coder families contest per chunk (optimizer moments are
@@ -142,7 +159,7 @@ def decode_leaf(blob: bytes, meta: Dict[str, Any]) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"])
     codec = meta["codec"]
-    if codec in ("sz3_lorenzo_rel", "sz3_chunked_rel", "sz3_auto_rel"):
+    if codec in ("sz3_lorenzo_rel", "sz3_chunked_rel", "sz3_auto_rel", "sz3_psnr"):
         # all are self-describing SZ3 containers (v1 / v2 multi-chunk / v3)
         arr = sz3_decompress(blob)
         return arr.reshape(shape).astype(dtype)

@@ -29,11 +29,19 @@ def main():
     ap.add_argument(
         "--offload-kv",
         default="none",
-        choices=["none", "chunked", "auto"],
+        choices=["none", "chunked", "auto", "quality"],
         help="'chunked': prediction-pipeline candidates only; 'auto': adds "
-        "the sz3_transform candidate (KV channels are often oscillatory)",
+        "the sz3_transform candidate (KV channels are often oscillatory); "
+        "'quality': closed-loop rate control to --offload-psnr dB instead "
+        "of a hand-picked error bound",
     )
     ap.add_argument("--offload-eb", type=float, default=1e-3)
+    ap.add_argument(
+        "--offload-psnr",
+        type=float,
+        default=60.0,
+        help="PSNR target (dB) for --offload-kv quality",
+    )
     ap.add_argument(
         "--offload-workers",
         type=int,
@@ -68,12 +76,13 @@ def main():
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
-    if args.offload_kv in ("chunked", "auto"):
+    if args.offload_kv in ("chunked", "auto", "quality"):
         offload_cache(
             cache,
             eb=args.offload_eb,
             workers=args.offload_workers,
             candidates="auto" if args.offload_kv == "auto" else None,
+            target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
         )
 
 
@@ -83,15 +92,24 @@ def offload_cache(
     chunk_bytes: int = 1 << 20,
     workers: int = 1,
     candidates=None,
+    target_psnr: float = None,
 ):
     """Stream every float cache leaf through the chunked engine; report totals.
 
     Frames are produced (and could be written to host/disk) one chunk at a
     time — working memory stays bounded by one chunk regardless of cache size.
     ``candidates="auto"`` (or an explicit name tuple) widens the per-chunk
-    contest to the transform coder family.
+    contest to the transform coder family.  ``target_psnr`` switches to the
+    closed-loop quality-targeted controller: instead of a hand-picked error
+    bound, each chunk is compressed at whatever bound hits the PSNR floor,
+    and the achieved PSNR is reported alongside the ratio.
     """
-    from repro.core import AUTO_CANDIDATES, CompressionConfig, ErrorBoundMode
+    from repro.core import (
+        AUTO_CANDIDATES,
+        CompressionConfig,
+        ErrorBoundMode,
+        QualityCompressor,
+    )
     from repro.core.chunking import DEFAULT_CANDIDATES, compress_stream
 
     if candidates is None:
@@ -99,7 +117,18 @@ def offload_cache(
     elif candidates == "auto":
         candidates = AUTO_CANDIDATES
     conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=eb)
+    quality = (
+        QualityCompressor(
+            target_psnr=target_psnr,
+            candidates=candidates,
+            chunk_bytes=chunk_bytes,
+            workers=workers,
+        )
+        if target_psnr is not None
+        else None
+    )
     n_in = n_out = n_leaves = 0
+    worst_psnr = float("inf")
     t0 = time.perf_counter()
     for leaf in jax.tree.leaves(cache):
         dt = getattr(leaf, "dtype", None)
@@ -108,17 +137,30 @@ def offload_cache(
             continue
         a = np.asarray(jnp.asarray(leaf, jnp.float32))
         arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
-        for frame in compress_stream(
-            arr, conf, candidates=candidates, chunk_bytes=chunk_bytes, workers=workers
-        ):
-            n_out += len(frame)
+        if quality is not None:
+            res = quality.compress(arr)
+            n_out += len(res.blob)
+            worst_psnr = min(worst_psnr, res.meta["quality"]["achieved_psnr"])
+        else:
+            for frame in compress_stream(
+                arr, conf, candidates=candidates, chunk_bytes=chunk_bytes,
+                workers=workers,
+            ):
+                n_out += len(frame)
         n_in += arr.nbytes
         n_leaves += 1
     dt = time.perf_counter() - t0
-    print(
-        f"kv offload (chunked stream, rel eb={eb:g}): {n_leaves} leaves, "
-        f"{n_in / max(1, n_out):.2f}x ratio, {n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
-    )
+    if quality is not None:
+        print(
+            f"kv offload (quality, target {target_psnr:g} dB): {n_leaves} leaves, "
+            f"{n_in / max(1, n_out):.2f}x ratio, worst leaf {worst_psnr:.1f} dB, "
+            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
+        )
+    else:
+        print(
+            f"kv offload (chunked stream, rel eb={eb:g}): {n_leaves} leaves, "
+            f"{n_in / max(1, n_out):.2f}x ratio, {n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
+        )
     return n_in, n_out
 
 

@@ -1,0 +1,111 @@
+"""(Re)generate the golden-blob conformance corpus.
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/data/gen_conformance.py
+
+Each corpus entry is a pair ``<name>.sz3`` (a committed container blob) +
+``<name>.npy`` (the exact array its decode must keep producing, byte for
+byte).  ``tests/test_container_conformance.py`` decodes every committed blob
+with the CURRENT code and compares against the committed payload — so a
+change that silently alters the meaning of an already-written v1/v2/v3/v4
+stream fails loudly, forever.
+
+Only ever ADD entries (a new container generation gets a new pair); never
+regenerate existing pairs unless a format break is intentional and
+documented — regenerating is exactly the failure mode this corpus exists to
+catch.
+
+Blobs are written with the process-effective lossless backend; the container
+records the actual backend name, so corpus blobs decode in any environment
+(gzip/lzma ship with CPython; zstd-written blobs need zstandard, which the
+[test] extra installs).
+"""
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2] / "src"))
+
+from repro.core import (  # noqa: E402
+    CompressionConfig,
+    ErrorBoundMode,
+    SZ3Compressor,
+    predictors,
+    preprocess,
+    sz3_chunked,
+    sz3_lorenzo,
+    sz3_lr,
+    sz3_pwr,
+    sz3_quality,
+    sz3_transform,
+    decompress,
+)
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def smooth(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax) / np.sqrt(shape[ax])
+    return x.astype(dtype)
+
+
+def emit(name: str, blob: bytes) -> None:
+    path = HERE / f"{name}.sz3"
+    if path.exists():
+        print(f"SKIP {name}: already committed (delete explicitly to regenerate)")
+        return
+    decoded = decompress(blob)
+    path.write_bytes(blob)
+    np.save(HERE / f"{name}.npy", decoded)
+    print(f"wrote {name}: blob {len(blob)}B, payload {decoded.shape} {decoded.dtype}")
+
+
+def main():
+    abs_conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    rel_conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+    pwr_conf = CompressionConfig(mode=ErrorBoundMode.PW_REL, eb=1e-3)
+
+    x = smooth((40, 12), seed=11)
+    emit("v1_lorenzo_abs", sz3_lorenzo().compress(x, abs_conf).blob)
+    emit("v1_lr_rel", sz3_lr().compress(smooth((30, 18), seed=12), rel_conf).blob)
+
+    # v1 + log preprocessor: the single-pipeline PW_REL composition
+    y = np.exp(smooth((25, 16), seed=13, dtype=np.float64) * 2.0)
+    y[3, 4] = 0.0
+    y[7, 7] = -y[7, 7]
+    comp_log = SZ3Compressor(
+        preprocessor=preprocess.LogTransform(),
+        predictor=predictors.LorenzoPredictor(),
+    )
+    emit("v1_log_pwrel", comp_log.compress(y, pwr_conf).blob)
+
+    # v2 multi-chunk (3 chunks, adaptive selection)
+    z = smooth((48, 32), seed=14)
+    emit("v2_chunked_rel", sz3_chunked(chunk_bytes=2048).compress(z, rel_conf).blob)
+
+    # v2 + quality records (decodes through the plain v2 path)
+    emit(
+        "v2_quality_psnr",
+        sz3_quality(target_psnr=50.0, chunk_bytes=2048).compress(z).blob,
+    )
+
+    # v3 blockwise transform
+    osc = (np.sin(0.9 * np.pi * np.arange(1536)) + 0.05 * smooth((1536,), 15)).astype(
+        np.float32
+    )
+    emit("v3_transform_abs", sz3_transform().compress(osc, abs_conf).blob)
+
+    # v4 pointwise-relative chunked (log side channels per chunk)
+    w = np.exp(smooth((64, 24), seed=16, dtype=np.float64))
+    w[5, 5] = 0.0
+    w[::9, 3] *= -1
+    emit("v4_pwr", sz3_pwr(eb=1e-3, chunk_bytes=4096).compress(w, pwr_conf).blob)
+
+
+if __name__ == "__main__":
+    main()

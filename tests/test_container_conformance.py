@@ -1,0 +1,82 @@
+"""Golden-blob conformance: committed v1/v2/v3/v4 containers must keep
+decoding to bit-identical payloads.
+
+The corpus under ``tests/data/`` (see ``gen_conformance.py`` there) pins one
+blob per container generation; any change to a decode path, a header field
+default, a side-channel layout, or a predictor's reconstruction arithmetic
+that alters the meaning of an ALREADY-WRITTEN stream fails here — old streams
+in the wild cannot be re-encoded.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import decompress, parse_header
+from repro.core.chunking import decompress_chunk
+
+DATA = pathlib.Path(__file__).resolve().parent / "data"
+
+CORPUS = sorted(p.stem for p in DATA.glob("*.sz3"))
+
+#: every container generation must stay represented — deleting a corpus pair
+#: must fail the suite, not silently shrink coverage
+EXPECTED_GENERATIONS = {
+    "v1_lorenzo_abs": (1, None),
+    "v1_lr_rel": (1, None),
+    "v1_log_pwrel": (1, None),
+    "v2_chunked_rel": (2, "chunked"),
+    "v2_quality_psnr": (2, "chunked"),
+    "v3_transform_abs": (3, "transform"),
+    "v4_pwr": (4, "pwr"),
+}
+
+
+def test_corpus_complete():
+    missing = set(EXPECTED_GENERATIONS) - set(CORPUS)
+    assert not missing, f"conformance corpus entries missing: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("name", CORPUS)
+def test_decode_bit_exact(name):
+    blob = (DATA / f"{name}.sz3").read_bytes()
+    expected = np.load(DATA / f"{name}.npy")
+    out = decompress(blob)
+    assert out.dtype == expected.dtype, f"{name}: dtype drifted"
+    assert out.shape == expected.shape, f"{name}: shape drifted"
+    assert out.tobytes() == expected.tobytes(), (
+        f"{name}: decoded payload is no longer bit-identical — a decode path "
+        "changed the meaning of an already-written stream"
+    )
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_GENERATIONS))
+def test_header_generation_stable(name):
+    version, kind = EXPECTED_GENERATIONS[name]
+    header, body_off = parse_header((DATA / f"{name}.sz3").read_bytes())
+    assert header.get("v", 1) == version
+    if kind is not None:
+        assert header["kind"] == kind
+    assert body_off > 20
+
+
+@pytest.mark.parametrize("name", ["v2_chunked_rel", "v2_quality_psnr", "v4_pwr"])
+def test_multi_chunk_random_access(name):
+    """Per-chunk random access must reproduce the same bytes as full decode."""
+    blob = (DATA / f"{name}.sz3").read_bytes()
+    header, _ = parse_header(blob)
+    expected = np.load(DATA / f"{name}.npy")
+    parts = [decompress_chunk(blob, i) for i in range(len(header["chunks"]))]
+    assert len(parts) > 1, f"{name}: corpus blob should be multi-chunk"
+    joined = np.concatenate(parts, axis=0).astype(expected.dtype)
+    assert joined.reshape(expected.shape).tobytes() == expected.tobytes()
+
+
+def test_quality_records_survive_in_v2_container():
+    """The quality container is a plain v2 blob whose chunk table carries
+    achieved-quality records; both the records and the summary must parse."""
+    header, _ = parse_header((DATA / "v2_quality_psnr.sz3").read_bytes())
+    assert header["quality"]["target"] == {"kind": "psnr", "value": 50.0}
+    assert header["quality"]["achieved_psnr"] >= 49.0
+    for chunk in header["chunks"]:
+        assert {"eb", "mse", "psnr", "bits"} <= set(chunk["q"])

@@ -219,3 +219,37 @@ def test_streaming_equals_one_shot(x, eb, n_chunks):
     ).reshape(x.shape)
     assert np.array_equal(streamed.astype(np.float64), one_shot.astype(np.float64))
     assert metrics.max_abs_error(x, one_shot) <= eb * (1 + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 400),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    zero_frac=st.floats(0.0, 0.5),
+    neg_frac=st.floats(0.0, 1.0),
+    with_nonfinite=st.booleans(),
+)
+def test_pwr_side_channel_fuzz(seed, n, eb, zero_frac, neg_frac, with_nonfinite):
+    """PW_REL side-channel round trip: the pointwise bound for every finite
+    nonzero element, signs preserved, exact zeros exact, non-finite values
+    bit-stable — under arbitrary sign/zero/magnitude mixes (the fuzz
+    companion to tests/test_error_modes.py)."""
+    from repro.core import PIPELINES
+
+    rng = np.random.default_rng(seed)
+    x = np.exp(rng.normal(0, 5, n))
+    x[rng.random(n) < neg_frac] *= -1
+    x[rng.random(n) < zero_frac] = 0.0
+    if with_nonfinite and n >= 3:
+        x[rng.integers(n)] = np.nan
+        x[rng.integers(n)] = np.inf
+    comp = PIPELINES["sz3_pwr"](eb=eb, chunk_bytes=1 << 12)
+    xhat = decompress(comp.compress(x).blob)
+    fin = np.isfinite(x)
+    nz = fin & (x != 0)
+    if nz.any():
+        assert (np.abs(x[nz] - xhat[nz]) / np.abs(x[nz])).max() <= eb * (1 + 1e-9)
+        assert np.array_equal(np.sign(xhat[nz]), np.sign(x[nz]))
+    assert np.all(xhat[fin & (x == 0)] == 0.0)
+    assert np.array_equal(xhat[~fin], x[~fin], equal_nan=True)

@@ -1,0 +1,133 @@
+"""Quality-targeted rate controller: PSNR/ratio/bitrate targets, the
+per-chunk achieved records, and the integrations that consume them."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    PIPELINES,
+    QualityCompressor,
+    QualityTarget,
+    achieved_quality,
+    decompress,
+    metrics,
+    sz3_quality,
+)
+
+
+def smooth_field(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax) / np.sqrt(shape[ax])
+    return x.astype(dtype)
+
+
+def test_target_validation():
+    with pytest.raises(ValueError):
+        QualityTarget()
+    with pytest.raises(ValueError):
+        QualityTarget(psnr=60.0, ratio=10.0)
+    with pytest.raises(ValueError):
+        QualityTarget(psnr=-3.0)
+    assert QualityTarget(psnr=60.0).kind == "psnr"
+    assert QualityTarget(bitrate=2.0).kind == "bitrate"
+
+
+@pytest.mark.parametrize("target", [45.0, 60.0, 75.0])
+def test_psnr_target_within_one_db(target):
+    """The acceptance band: achieved within +-1 dB, never below target-1."""
+    data = smooth_field((160, 96, 16), seed=3) * 10.0
+    res = sz3_quality(target_psnr=target, chunk_bytes=1 << 18).compress(data)
+    xhat = decompress(res.blob)
+    achieved = metrics.psnr(data, xhat)
+    assert target - 1.0 <= achieved <= target + 1.0, achieved
+    # the recorded summary must match the independent measurement closely
+    assert abs(res.meta["quality"]["achieved_psnr"] - achieved) < 0.05
+
+
+def test_higher_psnr_costs_more_bits():
+    data = smooth_field((128, 64, 16), seed=4)
+    r40 = sz3_quality(target_psnr=40.0, chunk_bytes=1 << 18).compress(data)
+    r70 = sz3_quality(target_psnr=70.0, chunk_bytes=1 << 18).compress(data)
+    assert r40.ratio > r70.ratio
+
+
+def test_ratio_target_tracks():
+    data = smooth_field((128, 64, 16), seed=5)
+    res = sz3_quality(target_ratio=8.0, chunk_bytes=1 << 18).compress(data)
+    # estimator + one-step correction control: generous +-30% envelope
+    assert 0.7 * 8.0 <= res.meta["quality"]["achieved_ratio"] <= 1.3 * 8.0
+
+
+def test_bitrate_target_tracks():
+    data = smooth_field((128, 64, 16), seed=6)
+    res = sz3_quality(target_bitrate=3.0, chunk_bytes=1 << 18).compress(data)
+    assert 0.7 * 3.0 <= res.meta["quality"]["achieved_bits"] <= 1.3 * 3.0
+
+
+def test_per_chunk_records_in_container():
+    data = smooth_field((96, 64), seed=7)
+    res = sz3_quality(target_psnr=55.0, chunk_bytes=4096).compress(data)
+    q = achieved_quality(res.blob)
+    assert q["target"] == {"kind": "psnr", "value": 55.0}
+    chunks = res.meta["chunks"]
+    assert len(chunks) > 1
+    for c in chunks:
+        rec = c["q"]
+        assert rec["eb"] > 0
+        assert rec["psnr"] >= 55.0  # every chunk honours the floor
+        assert rec["bits"] > 0
+    # non-quality containers expose no record
+    v1 = PIPELINES["sz3_lorenzo"]().compress(data, CompressionConfig(eb=1e-3))
+    assert achieved_quality(v1.blob) is None
+
+
+def test_constant_array_is_exact():
+    const = np.full((64, 64), 1.25, np.float32)
+    res = sz3_quality(target_psnr=60.0, chunk_bytes=4096).compress(const)
+    assert np.array_equal(decompress(res.blob), const)
+    assert res.meta["quality"]["achieved_psnr"] == float("inf")
+
+
+def test_registered_and_default_target():
+    comp = PIPELINES["sz3_quality"]()
+    assert isinstance(comp, QualityCompressor)
+    assert comp.target.kind == "psnr" and comp.target.psnr == 60.0
+
+
+def test_workers_give_identical_container():
+    data = smooth_field((128, 64, 8), seed=8)
+    b1 = QualityCompressor(target_psnr=55.0, chunk_bytes=1 << 17, workers=1).compress(data).blob
+    b4 = QualityCompressor(target_psnr=55.0, chunk_bytes=1 << 17, workers=4).compress(data).blob
+    assert b1 == b4
+
+
+def test_quality_container_decodes_via_plain_v2_path():
+    """The quality container is kind "chunked" v2 — a reader that knows
+    nothing about quality records decodes it."""
+    from repro.core import parse_header
+    from repro.core.chunking import decompress_chunked
+
+    data = smooth_field((96, 32), seed=9)
+    res = sz3_quality(target_psnr=50.0, chunk_bytes=4096).compress(data)
+    header, off = parse_header(res.blob)
+    assert header["kind"] == "chunked" and header["v"] == 2
+    out = decompress_chunked(res.blob, header, off)
+    assert out.shape == data.shape
+    assert metrics.psnr(data, out) >= 49.0
+
+
+def test_checkpoint_psnr_codec_roundtrip(tmp_path):
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.ft.checkpoint import LeafPolicy, decode_leaf, encode_leaf
+
+    arr = smooth_field((64, 256), seed=10)
+    blob, meta = encode_leaf(arr, LeafPolicy(mode="psnr", target_psnr=65.0))
+    assert meta["codec"] == "sz3_psnr"
+    assert meta["achieved_psnr"] >= 64.0
+    out = decode_leaf(blob, meta)
+    assert out.shape == arr.shape and out.dtype == arr.dtype
+    assert metrics.psnr(arr, out) >= 64.0
