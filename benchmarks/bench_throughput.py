@@ -30,6 +30,7 @@ from repro.core import (
     metrics,
     sz3_auto,
     sz3_chunked,
+    sz3_hybrid,
     sz3_interp,
     sz3_lorenzo,
     sz3_lr,
@@ -211,6 +212,73 @@ def quality_rows(full: bool = False, seed: int = 3):
     }
 
 
+def mixed_regime_field(shape=(256, 256), seed: int = 3) -> np.ndarray:
+    """The hybrid engine's acceptance fixture: four 16-aligned regimes whose
+    per-block winners differ (smooth -> Lorenzo-1, quadratic -> Lorenzo-2,
+    oscillatory -> zero-predictor, noisy plane -> regression, zero tile ->
+    zero), so no single-predictor pipeline can match per-block selection.
+    Seed-deterministic: the gate ratios are machine-independent."""
+    rng = np.random.default_rng(seed)
+    h, w = shape
+    x = np.zeros(shape, np.float64)
+    h2, w2 = h // 2, w // 2
+    x[:h2, :w2] = np.cumsum(rng.standard_normal((h2, w2)), axis=0)
+    i, j = np.meshgrid(
+        np.arange(h2, dtype=np.float64),
+        np.arange(w2, dtype=np.float64),
+        indexing="ij",
+    )
+    x[h2:, :w2] = 2e-3 * (i * i + j * j)
+    t = np.arange(h2 * w2, dtype=np.float64)
+    x[:h2, w2:] = np.sin(0.93 * np.pi * t).reshape(h2, w2) + 0.01 * (
+        rng.standard_normal((h2, w2))
+    )
+    x[h2:, w2:] = 0.4 * i + 0.2 * j + 2.5e-3 * rng.standard_normal((h2, w2))
+    x[h2 : h2 + 48, w2 : w2 + 48] = 0.0
+    return x.astype(np.float32)
+
+
+def hybrid_rows(full: bool = False, seed: int = 3):
+    """Block-hybrid engine vs every single-predictor pipeline at the same
+    ABS bound on the mixed-regime fixture (the PR5 acceptance criterion:
+    hybrid strictly better than the best of them, bound verified pointwise).
+    Ratios are data-deterministic, so check_regression.py gates them as
+    absolute criteria."""
+    shape = (512, 512) if full else (256, 256)
+    data = mixed_regime_field(shape, seed)
+    eb = 1e-3
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb)
+    mb = data.nbytes / 1e6
+    comp_h = sz3_hybrid()
+    t_enc, res_h = _best(lambda: comp_h.compress(data, conf, with_stats=True))
+    t_dec, xhat = _best(lambda: decompress(res_h.blob))
+    bound_ok = float(
+        np.abs(xhat.astype(np.float64) - data).max() <= eb * (1 + 1e-9)
+    )
+    singles = {}
+    for name, comp in [
+        ("lorenzo", sz3_lorenzo()),
+        ("lr", sz3_lr()),
+        ("interp", sz3_interp()),
+    ]:
+        _, res = _best(lambda: comp.compress(data, conf), repeats=1)
+        singles[name] = res.ratio
+    best_single = max(singles.values())
+    return {
+        "data_MB": round(mb, 1),
+        "eb_abs": eb,
+        "ratio_hybrid": round(res_h.ratio, 3),
+        **{f"ratio_{k}": round(v, 3) for k, v in singles.items()},
+        "ratio_vs_best_single": round(res_h.ratio / best_single, 3),
+        "bound_ok": bound_ok,
+        "compress_MBps": round(mb / t_enc, 1),
+        "decompress_MBps": round(mb / t_dec, 1),
+        "tag_shares": {
+            k: round(v, 3) for k, v in res_h.meta["tag_shares"].items()
+        },
+    }
+
+
 def perf_rows(full: bool = False):
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
@@ -219,6 +287,7 @@ def perf_rows(full: bool = False):
         "chunked_workers": chunked_rows(full),
         "transform": transform_rows(full),
         "quality": quality_rows(full),
+        "hybrid": hybrid_rows(full),
     }
 
 
@@ -234,8 +303,9 @@ def run(fields=None, seed: int = 3, repeats: int = 1):
             ("SZ3-LR", sz3_lr()),
             ("SZ3-Interp", sz3_interp()),
             ("SZ3-Transform", sz3_transform()),
+            ("SZ3-Hybrid(blockwise)", sz3_hybrid()),
             ("SZ3-Chunked(adaptive)", sz3_chunked(chunk_bytes=1 << 21)),
-            ("SZ3-Auto(pred+transform)", sz3_auto(chunk_bytes=1 << 21)),
+            ("SZ3-Auto(pred+transform+hybrid)", sz3_auto(chunk_bytes=1 << 21)),
         ]:
             t0 = time.perf_counter()
             for _ in range(repeats):

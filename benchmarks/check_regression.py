@@ -52,6 +52,19 @@ QUALITY_GATES = [
         "pointwise-relative zeros reconstruct exactly",
         lambda v, perf: v >= 1.0,
     ),
+    # block-hybrid engine (PR5): per-block selection must strictly beat the
+    # best single-predictor pipeline on the mixed-regime fixture, with the
+    # ABS bound verified pointwise — both data-deterministic (fixed seed)
+    (
+        ("hybrid", "ratio_vs_best_single"),
+        "hybrid ratio strictly better than best single-predictor pipeline",
+        lambda v, perf: v > 1.0,
+    ),
+    (
+        ("hybrid", "bound_ok"),
+        "hybrid round-trip within the ABS bound pointwise",
+        lambda v, perf: v >= 1.0,
+    ),
 ]
 
 

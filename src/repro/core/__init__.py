@@ -38,11 +38,17 @@ from .chunking import (
     write_frames,
 )
 from . import transform
-from .transform import (  # noqa: I001  (transform must import after chunking)
+from . import blockwise  # noqa: I001  (blockwise must import after transform:
+# it registers sz3_hybrid and appends it to transform.AUTO_CANDIDATES)
+from .transform import (  # noqa: I001  (re-export AFTER blockwise extends it)
     AUTO_CANDIDATES,
     TransformCompressor,
     sz3_auto,
     sz3_transform,
+)
+from .blockwise import (
+    BlockHybridCompressor,
+    sz3_hybrid,
 )
 from . import quality
 from .quality import (  # noqa: I001  (quality must import after transform)
@@ -84,6 +90,9 @@ __all__ = [
     "sz3_auto",
     "AUTO_CANDIDATES",
     "transform",
+    "BlockHybridCompressor",
+    "sz3_hybrid",
+    "blockwise",
     "compress_stream",
     "decompress_stream",
     "decompress_chunk",

@@ -72,6 +72,10 @@ DEFAULT_CANDIDATES: Tuple[str, ...] = ("sz3_lorenzo", "sz3_lr", "sz3_interp")
 #: elements drawn from each chunk for candidate scoring
 SAMPLE_BUDGET = 4096
 
+#: strided probe blocks per chunk sample: a single centred block sees only
+#: the middle regime of piecewise data and mis-ranks candidates for the rest
+SAMPLE_PROBES = 3
+
 _T = TypeVar("_T")
 _R = TypeVar("_R")
 
@@ -126,14 +130,22 @@ def chunk_slices(
     return [slice(i, min(i + rows, n0)) for i in range(0, n0, rows)]
 
 
-def _sample_block(chunk: np.ndarray, budget: int = SAMPLE_BUDGET) -> np.ndarray:
-    """Centred contiguous sub-block with ~budget elements.
+def _sample_block(
+    chunk: np.ndarray, budget: int = SAMPLE_BUDGET, probes: int = SAMPLE_PROBES
+) -> np.ndarray:
+    """2-3 strided contiguous probe blocks with ~budget elements in total.
 
-    Contiguity (vs strided decimation) keeps neighbour statistics intact, so
-    stencil predictors are not penalized relative to fit-based ones.  Budget
-    unused by short axes is redistributed to the long ones (smallest axis
-    first), so skinny chunks like (1, 4M) still yield a ~budget-sized sample
-    instead of a statistically blind sliver.
+    Contiguity WITHIN each probe keeps neighbour statistics intact (stencil
+    predictors are not penalized relative to fit-based ones), while spreading
+    the probes along the chunk's longest axis keeps piecewise-regime chunks
+    represented: the old single centred block saw only the middle regime and
+    biased selection toward whatever predictor wins there.  The probe seams
+    inject one junk stencil row each — ~2 rows out of budget/probes per
+    probe, negligible.  Budget unused by short axes is redistributed to the
+    long ones (smallest axis first), so skinny chunks like (1, 4M) still
+    yield a ~budget-sized sample.  Fully deterministic (no RNG): the same
+    chunk always yields the same sample, which is what keeps parallel
+    containers byte-identical to serial ones.
     """
     if chunk.size <= budget:
         return chunk
@@ -144,11 +156,30 @@ def _sample_block(chunk: np.ndarray, budget: int = SAMPLE_BUDGET) -> np.ndarray:
         side = max(1, int(rem ** (1.0 / axes_left) + 1e-9))
         takes[ax] = min(chunk.shape[ax], side)
         rem = max(1, rem // takes[ax])
-    sl = tuple(
+    axl = int(np.argmax(chunk.shape))
+    k = max(1, int(probes))
+    per = max(1, takes[axl] // k)
+    if k <= 1 or chunk.shape[axl] < k * per + k:
+        # probes would overlap — the chunk is barely bigger than the sample
+        # along its longest axis, so the centred block already covers it
+        sl = tuple(
+            slice((dim - t) // 2, (dim - t) // 2 + t)
+            for dim, t in zip(chunk.shape, takes)
+        )
+        return chunk[sl]
+    base = [
         slice((dim - t) // 2, (dim - t) // 2 + t)
         for dim, t in zip(chunk.shape, takes)
-    )
-    return chunk[sl]
+    ]
+    # probe 0 flush with the start, probe k-1 flush with the end, the rest
+    # evenly strided between — piecewise regimes at either edge are seen
+    step = (chunk.shape[axl] - per) // (k - 1)
+    pieces = []
+    for i in range(k):
+        sl = list(base)
+        sl[axl] = slice(i * step, i * step + per)
+        pieces.append(chunk[tuple(sl)])
+    return np.concatenate(pieces, axis=axl)
 
 
 # ---------------------------------------------------------------------------
@@ -584,6 +615,8 @@ def _pipeline_name_from_spec(spec: Dict[str, Any]) -> str:
         return "sz3_truncation"
     if spec.get("kind") == "transform":
         return "sz3_transform"
+    if spec.get("kind") == "hybrid":
+        return "sz3_hybrid"
     pred = spec.get("predictor")
     if pred == "composite":
         return "sz3_lr"

@@ -25,6 +25,9 @@ so ``decompress(blob)`` rebuilds the exact pipeline.  Named factory pipelines:
                     chunk pipelines, v4 container (chunking.py)
   sz3_quality     — closed-loop quality-targeted rate controller
                     (target PSNR / ratio / bitrate; quality.py)
+  sz3_hybrid      — block-level multi-predictor hybrid engine: per-block
+                    zero/Lorenzo-1/Lorenzo-2/regression contest feeding one
+                    shared entropy stream (blockwise.py; v5 container)
 """
 from __future__ import annotations
 
@@ -217,9 +220,11 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
 
     Handles every container generation: v1 single-pipeline blobs, v2
     multi-chunk blobs (per-chunk spec + offsets; see chunking.py), v3
-    blockwise-transform blobs, and v4 pointwise-relative multi-chunk blobs
+    blockwise-transform blobs, v4 pointwise-relative multi-chunk blobs
     (kind "pwr": chunk blobs carry log-domain side channels in their
-    pre_meta).  ``workers`` parallelizes multi-chunk decode (ignored for
+    pre_meta), and v5 block-hybrid blobs (kind "hybrid": per-block
+    predictor tags + coefficient side channels; see blockwise.py).
+    ``workers`` parallelizes multi-chunk decode (ignored for
     single-pipeline blobs).
     """
     header, body_off = parse_header(blob)
@@ -234,6 +239,10 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
         from .transform import TransformCompressor  # local: avoids import cycle
 
         return TransformCompressor._decompress_body(blob, header, body_off)
+    if spec["kind"] == "hybrid":  # v5 block-level multi-predictor containers
+        from .blockwise import BlockHybridCompressor  # local: avoids import cycle
+
+        return BlockHybridCompressor._decompress_body(blob, header, body_off)
     comp = SZ3Compressor.from_spec(spec)
     body = comp.lossless.decompress(blob[body_off:])
     enc_bytes = body[: header["enc_len"]]

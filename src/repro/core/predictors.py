@@ -67,6 +67,108 @@ def lorenzo_inverse(d: np.ndarray, order: int = 1) -> np.ndarray:
     return q
 
 
+# -- per-block entry points (blockwise hybrid engine; paper §3.2 per-block
+#    best-fit selection).  Axis 0 indexes blocks: the caller tiles ONCE via
+#    pad_to_blocks/blockify and every candidate below runs batched over the
+#    whole block set — no per-block re-padding or per-block python calls. ----
+
+def pad_to_blocks(data: np.ndarray, b: int) -> Tuple[np.ndarray, Tuple[int, ...]]:
+    """Replicate-pad every axis up to a multiple of ``b``; returns
+    (padded, original_shape)."""
+    pads = [(0, (-s) % b) for s in data.shape]
+    return np.pad(data, pads, mode="edge"), data.shape
+
+
+def blockify(x: np.ndarray, b: int) -> np.ndarray:
+    """(n1, n2, ...) -> (nblocks, b, b, ...); all axes must divide by ``b``."""
+    nd = x.ndim
+    shape = []
+    for s in x.shape:
+        shape += [s // b, b]
+    y = x.reshape(shape)
+    perm = list(range(0, 2 * nd, 2)) + list(range(1, 2 * nd, 2))
+    return y.transpose(perm).reshape((-1,) + (b,) * nd)
+
+
+def unblockify(blocks: np.ndarray, padded_shape: Sequence[int], b: int) -> np.ndarray:
+    """Inverse of :func:`blockify`."""
+    nd = len(padded_shape)
+    grid = [s // b for s in padded_shape]
+    y = blocks.reshape(grid + [b] * nd)
+    perm = []
+    for i in range(nd):
+        perm += [i, nd + i]
+    return y.transpose(perm).reshape(tuple(padded_shape))
+
+
+def block_coords(b: int, nd: int) -> List[np.ndarray]:
+    """Centred per-axis coordinates, broadcast-ready against (nb, b, ..., b)."""
+    cs = []
+    for ax in range(nd):
+        c = np.arange(b, dtype=np.float64) - (b - 1) / 2.0
+        shape = [1] * nd
+        shape[ax] = b
+        cs.append(c.reshape(shape))
+    return cs
+
+
+def block_lorenzo_filter(qblocks: np.ndarray, order: int = 1) -> np.ndarray:
+    """Block-local Lorenzo filter, batched: axis 0 indexes blocks, the stencil
+    runs over axes 1..nd only (zero-padded block boundaries, as in SZ2's
+    block-wise candidate)."""
+    d = qblocks
+    for _ in range(order):
+        for ax in range(1, qblocks.ndim):
+            d = np.diff(d, axis=ax, prepend=0)
+    return d
+
+
+def block_lorenzo_inverse(dblocks: np.ndarray, order: int = 1) -> np.ndarray:
+    """Inverse of :func:`block_lorenzo_filter` (per-block cumulative sums)."""
+    q = dblocks
+    for _ in range(order):
+        for ax in range(q.ndim - 1, 0, -1):
+            q = np.cumsum(q, axis=ax)
+    return q
+
+
+def block_plane_fit(
+    blocks: np.ndarray, b: int, eb: float
+) -> Tuple[List[np.ndarray], np.ndarray, np.ndarray]:
+    """Batched SZ2 hyperplane fit on pre-blockified data.
+
+    Returns ``(coef_q, pred, bad)``: per-block quantized coefficient integers
+    (nd+1 streams, SZ2 bounds — eb/2 intercept, eb/(2b) slopes), the
+    prediction every decoder will rebuild from those quantized coefficients,
+    and a per-block mask of non-finite fits (nan/inf inputs) whose
+    coefficients were zeroed — callers must not let such blocks win a
+    selection contest (their points belong on the unpredictable fail path).
+    """
+    nd = blocks.ndim - 1
+    nb = blocks.shape[0]
+    axes = tuple(range(1, nd + 1))
+    cs = block_coords(b, nd)
+    denom = (b**nd) * ((b * b - 1) / 12.0)
+    with np.errstate(invalid="ignore", over="ignore"):
+        raw = [blocks.mean(axis=axes)]
+        raw += [(blocks * cs[k]).sum(axis=axes) / denom for k in range(nd)]
+    bad = np.zeros(nb, bool)
+    coef_q: List[np.ndarray] = []
+    qhat: List[np.ndarray] = []
+    for k, vals in enumerate(raw):
+        ceb = eb / 2.0 if k == 0 else eb / (2.0 * b)
+        scaled = vals / (2.0 * ceb)
+        finite = np.isfinite(scaled) & (np.abs(scaled) < float(2**62))
+        bad |= ~finite
+        q = np.rint(np.where(finite, scaled, 0.0)).astype(np.int64)
+        coef_q.append(q)
+        qhat.append(q.astype(np.float64) * (2.0 * ceb))
+    pred = qhat[0].reshape((nb,) + (1,) * nd)
+    for k in range(nd):
+        pred = pred + qhat[1 + k].reshape((nb,) + (1,) * nd) * cs[k]
+    return coef_q, pred, bad
+
+
 def code_bits(
     abs_errors: np.ndarray, abs_eb: float, radius: int = 32768
 ) -> float:
@@ -595,40 +697,19 @@ class RegressionPredictor(Predictor):
     def estimate_error(self, sample, abs_eb, conf):
         return regression_bits(sample, abs_eb, conf.block_size, conf.quant_radius)
 
+    # thin wrappers over the module-level block helpers (kept as methods for
+    # API stability; the hybrid engine calls the module functions directly)
     def _pad(self, data: np.ndarray, b: int) -> Tuple[np.ndarray, Tuple[int, ...]]:
-        pads = [(0, (-s) % b) for s in data.shape]
-        return np.pad(data, pads, mode="edge"), data.shape
+        return pad_to_blocks(data, b)
 
     def _blockify(self, x: np.ndarray, b: int) -> np.ndarray:
-        # (n1/b, b, n2/b, b, ...) -> (nblocks, b, b, ...)
-        nd = x.ndim
-        shape = []
-        for s in x.shape:
-            shape += [s // b, b]
-        y = x.reshape(shape)
-        perm = list(range(0, 2 * nd, 2)) + list(range(1, 2 * nd, 2))
-        y = y.transpose(perm)
-        return y.reshape((-1,) + (b,) * nd)
+        return blockify(x, b)
 
     def _unblockify(self, blocks: np.ndarray, padded_shape, b: int) -> np.ndarray:
-        nd = len(padded_shape)
-        grid = [s // b for s in padded_shape]
-        y = blocks.reshape(grid + [b] * nd)
-        perm = []
-        for i in range(nd):
-            perm += [i, nd + i]
-        y = y.transpose(perm)
-        return y.reshape(padded_shape)
+        return unblockify(blocks, tuple(padded_shape), b)
 
     def _coords(self, b: int, nd: int) -> List[np.ndarray]:
-        # centred coordinates along each axis, broadcast to the block shape
-        cs = []
-        for ax in range(nd):
-            c = np.arange(b, dtype=np.float64) - (b - 1) / 2.0
-            shape = [1] * nd
-            shape[ax] = b
-            cs.append(c.reshape(shape))
-        return cs
+        return block_coords(b, nd)
 
     def compress(self, data, quantizer, conf):
         b = int(conf.block_size)

@@ -124,6 +124,12 @@ class LogTransform(Preprocessor):
     (nan/inf — log-undefined) ride an exact raw side channel, so the bound
     definition holds for every finite nonzero point and everything else
     round-trips exactly.
+
+    Subnormal magnitudes also ride the raw channel: near the bottom of the
+    subnormal range the storage dtype's representable quantum is relatively
+    enormous (up to 50% of the value), so no log-domain bound survives the
+    ``exp2`` + cast back — storing the handful of denormals exactly is the
+    only way the pointwise-relative contract can hold for them.
     """
 
     name = "log"
@@ -136,9 +142,16 @@ class LogTransform(Preprocessor):
             raise ValueError("LogTransform requires ErrorBoundMode.PW_REL")
         flat = np.asarray(data, np.float64).reshape(-1)
         thr = self.zero_threshold
+        dt = data.dtype if data.dtype.kind == "f" else np.dtype(np.float32)
         finite = np.isfinite(flat)
         zero_mask = finite & (np.abs(flat) <= thr)
-        nonfinite_mask = ~finite
+        # subnormals of the STORAGE dtype cannot honour a relative bound
+        # through exp2 + cast (their representable quantum is relatively
+        # huge) — they join nan/inf on the exact raw side channel
+        subnormal = (
+            finite & ~zero_mask & (np.abs(flat) < float(np.finfo(dt).tiny))
+        )
+        nonfinite_mask = ~finite | subnormal
         sign_mask = finite & (flat < 0)
         masked = zero_mask | nonfinite_mask
         safe = np.where(masked, 1.0, np.abs(flat))
@@ -150,7 +163,6 @@ class LogTransform(Preprocessor):
         # dtype (half-ulp relative error) and exp2 itself rounds once in
         # float64 — without the reservation a reconstruction sitting exactly
         # on the bound lands just past it after the cast
-        dt = data.dtype if data.dtype.kind == "f" else np.dtype(np.float32)
         eps = float(np.finfo(dt).eps) / 2 + 2.0**-52
         eb = float(conf.eb)
         eb_adj = (eb - eps) / (1.0 + eps)

@@ -53,7 +53,17 @@ from .chunking import (
 )
 from .config import CompressionConfig, ErrorBoundMode
 from .pipeline import CompressionResult
-from .transform import AUTO_CANDIDATES
+
+# ensure the block-hybrid engine is registered before the candidate set is
+# read: the quality controller's contest spans ALL families (prediction,
+# transform, block-hybrid)
+from . import blockwise as _blockwise  # noqa: F401
+from . import transform as _transform
+
+
+def _auto_candidates() -> Sequence[str]:
+    """Late-bound AUTO_CANDIDATES (blockwise.py extends it at import time)."""
+    return _transform.AUTO_CANDIDATES
 
 #: chunk-MSE aim band as a fraction of the per-chunk MSE budget: the upper
 #: edge is the hard budget (never exceeded after confirmation), the lower
@@ -151,13 +161,15 @@ class QualityCompressor:
         target_psnr: Optional[float] = None,
         target_ratio: Optional[float] = None,
         target_bitrate: Optional[float] = None,
-        candidates: Sequence[str] = AUTO_CANDIDATES,
+        candidates: Optional[Sequence[str]] = None,
         chunk_bytes: int = 1 << 22,
         conf: Optional[CompressionConfig] = None,
         workers: int = 1,
     ):
         self.target = QualityTarget(target_psnr, target_ratio, target_bitrate)
-        self.candidates = tuple(candidates)
+        self.candidates = tuple(
+            _auto_candidates() if candidates is None else candidates
+        )
         self.chunk_bytes = int(chunk_bytes)
         self.conf = conf or CompressionConfig()
         self.workers = max(1, int(workers))
@@ -468,7 +480,7 @@ def sz3_quality(
     target_psnr: Optional[float] = None,
     target_ratio: Optional[float] = None,
     target_bitrate: Optional[float] = None,
-    candidates: Sequence[str] = AUTO_CANDIDATES,
+    candidates: Optional[Sequence[str]] = None,
     chunk_bytes: int = 1 << 22,
     workers: int = 1,
     **kw,

@@ -406,19 +406,26 @@ def sz3_transform(lossless: str = "zstd", device: str = "auto") -> TransformComp
     return TransformCompressor(lossless=lossless, device=device)
 
 
-#: prediction AND transform entrants — the online SZ/ZFP selection criterion
+#: prediction AND transform entrants — the online SZ/ZFP selection criterion.
+#: blockwise.py appends "sz3_hybrid" at import time, so consumers must read
+#: this at CALL time (late binding), never capture it in a default argument.
 AUTO_CANDIDATES: Tuple[str, ...] = DEFAULT_CANDIDATES + ("sz3_transform",)
 
 
 def sz3_auto(
-    candidates=AUTO_CANDIDATES,
+    candidates=None,
     chunk_bytes: int = 1 << 22,
     workers: int = 1,
     **kw,
 ) -> ChunkedCompressor:
-    """Chunked engine contesting prediction vs transform per chunk."""
+    """Chunked engine contesting prediction vs transform (vs block-hybrid)
+    per chunk.  ``candidates=None`` resolves ``AUTO_CANDIDATES`` at call
+    time so late-registered engines join the contest."""
     return ChunkedCompressor(
-        candidates=candidates, chunk_bytes=chunk_bytes, workers=workers, **kw
+        candidates=AUTO_CANDIDATES if candidates is None else candidates,
+        chunk_bytes=chunk_bytes,
+        workers=workers,
+        **kw,
     )
 
 

@@ -132,11 +132,18 @@ def encode_leaf(
             return res.blob, meta
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
         if arr.nbytes >= _CHUNKED_MIN_BYTES:
-            # both coder families contest per chunk (optimizer moments are
-            # usually Lorenzo-friendly, but attention-derived leaves can be
-            # oscillatory along the feature axis — transform wins those)
+            # all three coder families contest per chunk: optimizer moments
+            # are usually Lorenzo-friendly, attention-derived leaves can be
+            # oscillatory along the feature axis (transform wins those), and
+            # leaves mixing regimes — embedding tables with hot/cold rows,
+            # moments with dead blocks — go to the block-hybrid engine
             comp = ChunkedCompressor(
-                candidates=("sz3_lorenzo", "sz3_lr", "sz3_transform"),
+                candidates=(
+                    "sz3_lorenzo",
+                    "sz3_lr",
+                    "sz3_transform",
+                    "sz3_hybrid",
+                ),
                 workers=_CHUNK_WORKERS if workers is None else workers,
             )
             meta["codec"] = "sz3_auto_rel"

@@ -29,11 +29,14 @@ def main():
     ap.add_argument(
         "--offload-kv",
         default="none",
-        choices=["none", "chunked", "auto", "quality"],
+        choices=["none", "chunked", "auto", "hybrid", "quality"],
         help="'chunked': prediction-pipeline candidates only; 'auto': adds "
-        "the sz3_transform candidate (KV channels are often oscillatory); "
-        "'quality': closed-loop rate control to --offload-psnr dB instead "
-        "of a hand-picked error bound",
+        "the sz3_transform and sz3_hybrid candidates (KV channels are often "
+        "oscillatory, and mixed hot/cold sequences suit per-block "
+        "selection); 'hybrid': the block-hybrid engine only (per-block "
+        "predictor selection inside every chunk); 'quality': closed-loop "
+        "rate control to --offload-psnr dB instead of a hand-picked error "
+        "bound",
     )
     ap.add_argument("--offload-eb", type=float, default=1e-3)
     ap.add_argument(
@@ -76,12 +79,17 @@ def main():
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
-    if args.offload_kv in ("chunked", "auto", "quality"):
+    if args.offload_kv in ("chunked", "auto", "hybrid", "quality"):
+        candidates = None
+        if args.offload_kv == "auto":
+            candidates = "auto"
+        elif args.offload_kv == "hybrid":
+            candidates = ("sz3_hybrid",)
         offload_cache(
             cache,
             eb=args.offload_eb,
             workers=args.offload_workers,
-            candidates="auto" if args.offload_kv == "auto" else None,
+            candidates=candidates,
             target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
         )
 

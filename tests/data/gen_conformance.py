@@ -35,6 +35,7 @@ from repro.core import (  # noqa: E402
     predictors,
     preprocess,
     sz3_chunked,
+    sz3_hybrid,
     sz3_lorenzo,
     sz3_lr,
     sz3_pwr,
@@ -105,6 +106,32 @@ def main():
     w[5, 5] = 0.0
     w[::9, 3] *= -1
     emit("v4_pwr", sz3_pwr(eb=1e-3, chunk_bytes=4096).compress(w, pwr_conf).blob)
+
+    # v5 block-hybrid: mixed-regime fixture with 16-aligned regime tiles so
+    # every predictor tag appears (zero / lorenzo-1 / lorenzo-2 / regression
+    # side channels + the shared stream), pinned so the per-block tag format
+    # and the coefficient-stream layout can never silently drift
+    rng = np.random.default_rng(17)
+    m = np.zeros((64, 64), np.float64)
+    m[:32, :32] = np.cumsum(rng.standard_normal((32, 32)), axis=0)  # smooth
+    i, j = np.meshgrid(np.arange(32.0), np.arange(32.0), indexing="ij")
+    m[32:, :32] = 2e-3 * (i * i + j * j)  # gentle quadratic (order-2 turf)
+    m[:32, 32:] = (  # noisy tilted plane (regression turf)
+        0.5 * i + 0.25 * j + 2.5e-3 * rng.standard_normal((32, 32))
+    )
+    t = np.arange(32 * 32, dtype=np.float64)
+    m[32:, 32:] = np.sin(0.93 * np.pi * t).reshape(32, 32)  # oscillatory
+    m[32:48, 32:48] = 0.0  # exact-zero tile (the constant-block fast path)
+    emit("v5_hybrid_mixed_abs", sz3_hybrid().compress(m.astype(np.float32), abs_conf).blob)
+
+    # v5 constant-block fixture: per-block constants + exact-zero blocks
+    c = np.repeat(
+        np.repeat(rng.integers(-4, 5, (3, 2)).astype(np.float32) * 1.25, 16, axis=0),
+        16,
+        axis=1,
+    )
+    c[16:32, :] = 0.0
+    emit("v5_hybrid_const_rel", sz3_hybrid().compress(c, rel_conf).blob)
 
 
 if __name__ == "__main__":

@@ -241,3 +241,70 @@ def test_checkpoint_leaf_uses_chunked_codec_and_roundtrips():
     blob, meta = encode_leaf(small, LeafPolicy("lossy", 1e-4))
     assert meta["codec"] == "sz3_lorenzo_rel"
     decode_leaf(blob, meta)
+
+
+# ---------------------------------------------------------------------------
+# strided probe sampling (the piecewise-selection bias fix)
+# ---------------------------------------------------------------------------
+
+def _piecewise_chunk(n=1 << 18, seed=7):
+    """Oscillatory edges, smooth centre: a single centred probe sees ONLY the
+    smooth regime and mis-ranks candidates for the 2/3 of the chunk that is
+    oscillatory (transform's home turf)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    x = (
+        np.sin(0.91 * np.pi * t)
+        + 0.05 * np.cumsum(rng.standard_normal(n)) / np.sqrt(n)
+    ).astype(np.float32)
+    mid = slice(n // 2 - 20000, n // 2 + 20000)
+    x[mid] = (np.cumsum(rng.standard_normal(40000)) * 0.01).astype(np.float32)
+    return x
+
+
+def test_sample_block_probes_span_piecewise_regimes():
+    """The sample must contain material from the chunk's edges, not just its
+    centre: the oscillatory edges have O(1) point-to-point jumps, the smooth
+    centre has O(1e-2) ones."""
+    from repro.core.chunking import SAMPLE_BUDGET, _sample_block
+
+    x = _piecewise_chunk()
+    s = _sample_block(x)
+    assert s.size <= SAMPLE_BUDGET
+    assert np.abs(np.diff(s.astype(np.float64))).max() > 0.5, (
+        "sample saw no oscillatory content — probe placement regressed to "
+        "the centre-only block"
+    )
+    # determinism: same chunk -> same sample (parallel byte-identity relies
+    # on selection being a pure function of the chunk)
+    assert np.array_equal(s, _sample_block(x))
+
+
+def test_strided_probes_fix_piecewise_selection_bias():
+    """Regression pin for the centred-sample bias: on the piecewise fixture
+    the full-array best candidate is the transform coder; multi-probe
+    sampling must rank it first, while the old single centred probe
+    (probes=1) demonstrably picks a smooth-regime pipeline instead."""
+    from repro.core.chunking import _sample_block
+    from repro.core.transform import AUTO_CANDIDATES
+
+    x = _piecewise_chunk()
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    winner, _ = select_pipeline(x, 1e-3, conf, AUTO_CANDIDATES)
+    assert winner == "sz3_transform", winner
+    # the old behaviour is _sample_block with a single probe: its sample is
+    # entirely smooth-centre data, so transform cannot win there
+    old_sample = _sample_block(x, probes=1)
+    assert np.abs(np.diff(old_sample.astype(np.float64))).max() < 0.5
+
+
+def test_sample_block_shapes_and_budget():
+    from repro.core.chunking import SAMPLE_BUDGET, _sample_block
+
+    for shape in [(64, 64, 64), (1, 1 << 20), (1 << 20,), (4096,), (10, 10)]:
+        arr = np.zeros(shape, np.float32)
+        s = _sample_block(arr)
+        assert s.ndim == arr.ndim
+        assert s.size <= max(arr.size, SAMPLE_BUDGET)
+        if arr.size > SAMPLE_BUDGET:
+            assert s.size >= SAMPLE_BUDGET // 2, (shape, s.shape)

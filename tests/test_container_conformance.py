@@ -1,4 +1,4 @@
-"""Golden-blob conformance: committed v1/v2/v3/v4 containers must keep
+"""Golden-blob conformance: committed v1/v2/v3/v4/v5 containers must keep
 decoding to bit-identical payloads.
 
 The corpus under ``tests/data/`` (see ``gen_conformance.py`` there) pins one
@@ -29,6 +29,8 @@ EXPECTED_GENERATIONS = {
     "v2_quality_psnr": (2, "chunked"),
     "v3_transform_abs": (3, "transform"),
     "v4_pwr": (4, "pwr"),
+    "v5_hybrid_mixed_abs": (5, "hybrid"),
+    "v5_hybrid_const_rel": (5, "hybrid"),
 }
 
 
@@ -70,6 +72,24 @@ def test_multi_chunk_random_access(name):
     assert len(parts) > 1, f"{name}: corpus blob should be multi-chunk"
     joined = np.concatenate(parts, axis=0).astype(expected.dtype)
     assert joined.reshape(expected.shape).tobytes() == expected.tobytes()
+
+
+def test_v5_hybrid_side_channels_pinned():
+    """The v5 header must keep carrying the per-block predictor-tag array
+    (2 bits/block) and the regression coefficient streams: the mixed-regime
+    corpus blob exercises every tag, so any layout drift fails here."""
+    header, _ = parse_header((DATA / "v5_hybrid_mixed_abs.sz3").read_bytes())
+    assert header["spec"]["kind"] == "hybrid"
+    hm = header["hyb_meta"]
+    assert hm["bs"] == 16
+    assert all(c > 0 for c in hm["counts"]), (
+        f"corpus blob no longer exercises every predictor tag: {hm['counts']}"
+    )
+    assert hm["n_reg"] == hm["counts"][3] > 0  # coefficient streams present
+    assert header["tag_len"] == (hm["nb"] + 3) // 4
+    # the constant-block fixture must keep hitting the zero fast path
+    h2, _ = parse_header((DATA / "v5_hybrid_const_rel.sz3").read_bytes())
+    assert h2["hyb_meta"]["counts"][0] > 0
 
 
 def test_quality_records_survive_in_v2_container():

@@ -1,0 +1,280 @@
+"""Differential fuzzing: the block-hybrid engine against the per-chunk ones.
+
+Every engine under test round-trips the SAME array under the SAME config;
+the properties asserted are the cross-engine contracts a format refactor can
+silently break:
+
+  (a) every engine honours its error bound POINTWISE per mode definition
+      (ABS / REL / PW_REL — see test_error_modes.py for the definitions);
+  (b) on mixed-regime fixtures the hybrid's payload is never more than 5%
+      larger than the best single-predictor engine (per-block selection must
+      never lose badly to any one of its own candidates);
+  (c) worker-count byte-identity holds for containers that route chunks
+      through the new engine (parallel output == serial output, bit for bit).
+
+Engines: ``sz3_hybrid`` (v5), ``sz3_chunked`` (v2), ``sz3_auto`` (v2 with
+the full candidate set incl. hybrid), ``sz3_pwr`` (v4, PW_REL only).
+"""
+import numpy as np
+import pytest
+
+try:  # the fuzz property needs hypothesis; the deterministic differential
+    # sweep below must keep running even where it is not installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal environments
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    CompressionConfig,
+    ErrorBoundMode,
+    PIPELINES,
+    decompress,
+    sz3_auto,
+    sz3_chunked,
+    sz3_hybrid,
+    sz3_pwr,
+)
+
+#: single-predictor engines the hybrid must stay within 5% of (property b)
+SINGLE_PREDICTOR = ("sz3_lorenzo", "sz3_lr", "sz3_interp")
+
+
+def _build(regime: str, dims, seed: int, dtype) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n = int(np.prod(dims))
+    if regime == "smooth":
+        x = rng.standard_normal(dims)
+        for ax in range(len(dims)):
+            x = np.cumsum(x, axis=ax) / np.sqrt(dims[ax])
+    elif regime == "oscillatory":
+        t = np.arange(n, dtype=np.float64).reshape(dims)
+        x = np.sin(0.91 * np.pi * t) + 0.01 * rng.standard_normal(dims)
+    elif regime == "constant":
+        x = np.full(dims, float(rng.normal()))
+    elif regime == "sparse":
+        x = np.zeros(dims)
+        mask = rng.random(dims) < 0.05
+        x[mask] = rng.standard_normal(int(mask.sum())) * 100.0
+    elif regime == "lognormal":
+        x = np.exp(rng.normal(0.0, 3.0, dims))
+        x[rng.random(dims) < 0.3] *= -1.0
+        x[rng.random(dims) < 0.02] = 0.0
+    else:  # mixed: smooth first half, oscillatory second half (leading axis)
+        x = rng.standard_normal(dims)
+        for ax in range(len(dims)):
+            x = np.cumsum(x, axis=ax) / np.sqrt(dims[ax])
+        half = dims[0] // 2
+        t = np.arange(int(np.prod((dims[0] - half,) + tuple(dims[1:]))))
+        x[half:] = (
+            np.sin(0.91 * np.pi * t).reshape((dims[0] - half,) + tuple(dims[1:]))
+        )
+    return np.ascontiguousarray(x.astype(dtype))
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def cases(draw, max_elems=3000):
+        ndim = draw(st.integers(1, 2))
+        dims = tuple(
+            draw(
+                st.lists(st.integers(2, 64), min_size=ndim, max_size=ndim).filter(
+                    lambda d: int(np.prod(d)) <= max_elems
+                )
+            )
+        )
+        regime = draw(
+            st.sampled_from(
+                ["smooth", "oscillatory", "constant", "sparse", "mixed", "lognormal"]
+            )
+        )
+        mode = draw(
+            st.sampled_from(
+                [ErrorBoundMode.ABS, ErrorBoundMode.REL, ErrorBoundMode.PW_REL]
+            )
+        )
+        eb = draw(st.sampled_from([1e-2, 1e-3, 1e-4]))
+        dtype = draw(st.sampled_from([np.float32, np.float64]))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return _build(regime, dims, seed, dtype), mode, eb, regime
+
+
+def _assert_bound(mode: ErrorBoundMode, eb: float, x, xhat, label: str):
+    x64 = np.asarray(x, np.float64)
+    xh64 = np.asarray(xhat, np.float64)
+    assert xhat.shape == x.shape and xhat.dtype == x.dtype, label
+    fin = np.isfinite(x64)
+    slack = 1 + 1e-6
+    if mode == ErrorBoundMode.ABS:
+        assert np.abs(x64[fin] - xh64[fin]).max(initial=0.0) <= eb * slack, label
+    elif mode == ErrorBoundMode.REL:
+        rng = x64[fin].max() - x64[fin].min() if fin.any() else 0.0
+        tol = eb * rng * slack if rng > 0 else 1e-300
+        assert np.abs(x64[fin] - xh64[fin]).max(initial=0.0) <= tol, label
+    else:  # PW_REL, pointwise
+        nz = fin & (x64 != 0)
+        rel = np.abs(x64[nz] - xh64[nz]) / np.abs(x64[nz])
+        assert rel.max(initial=0.0) <= eb * slack, label
+        zeros = fin & (x64 == 0)
+        assert np.all(xh64[zeros] == 0.0), f"{label}: zeros must stay exact"
+
+
+def _differential_case(x, mode, eb):
+    """One differential round: every engine, same array, pointwise bounds."""
+    conf = CompressionConfig(mode=mode, eb=eb)
+    engines = {
+        "sz3_hybrid": sz3_hybrid(),
+        "sz3_chunked": sz3_chunked(chunk_bytes=1 << 13),
+        "sz3_auto": sz3_auto(chunk_bytes=1 << 13),
+    }
+    if mode == ErrorBoundMode.PW_REL:
+        engines["sz3_pwr"] = sz3_pwr(eb=eb, chunk_bytes=1 << 13)
+    else:
+        with pytest.raises(ValueError):  # sz3_pwr refuses non-PW_REL configs
+            sz3_pwr(eb=eb).compress(x, conf)
+    blobs = {}
+    for name, eng in engines.items():
+        blob = eng.compress(x, conf).blob
+        blobs[name] = blob
+        _assert_bound(mode, eb, x, decompress(blob), f"{name}/{mode.value}")
+    # cross-engine payload sanity: all containers carry the same array, so a
+    # zero-length body means an engine fell off its format
+    assert min(len(v) for v in blobs.values()) > 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(case=cases())
+    def test_differential_bound_all_engines(case):
+        """(a): the same array through every engine, bound per mode."""
+        x, mode, eb, _regime = case
+        _differential_case(x, mode, eb)
+
+
+@pytest.mark.parametrize(
+    "regime", ["smooth", "oscillatory", "constant", "sparse", "mixed", "lognormal"]
+)
+@pytest.mark.parametrize(
+    "mode", [ErrorBoundMode.ABS, ErrorBoundMode.REL, ErrorBoundMode.PW_REL]
+)
+def test_differential_bound_fixed_grid(regime, mode):
+    """Deterministic slice of the fuzz space — runs even without hypothesis
+    so the differential contract is never silently unexercised."""
+    for dims, dtype, seed in [((41, 23), np.float32, 11), ((700,), np.float64, 12)]:
+        x = _build(regime, dims, seed, dtype)
+        _differential_case(x, mode, 1e-3)
+
+
+def _mixed_fixture_2d(seed=3, shape=(96, 64)):
+    """Four-regime quadrant fixture: smooth / quadratic / oscillatory / zero.
+
+    Each quadrant has a clear per-block winner (lorenzo1 / lorenzo2 /
+    zero-predictor / any), so per-block selection must beat every
+    single-predictor engine and certainly never trail one by >5%.
+    """
+    rng = np.random.default_rng(seed)
+    h, w = shape
+    x = np.zeros(shape, np.float64)
+    x[: h // 2, : w // 2] = np.cumsum(
+        rng.standard_normal((h // 2, w // 2)), axis=0
+    )
+    i, j = np.meshgrid(
+        np.arange(h - h // 2, dtype=np.float64),
+        np.arange(w // 2, dtype=np.float64),
+        indexing="ij",
+    )
+    x[h // 2 :, : w // 2] = 0.01 * (i * i + j * j)
+    t = np.arange((h // 2) * (w - w // 2), dtype=np.float64)
+    x[: h // 2, w // 2 :] = np.sin(0.93 * np.pi * t).reshape(
+        h // 2, w - w // 2
+    ) + 0.01 * rng.standard_normal((h // 2, w - w // 2))
+    return x.astype(np.float32)
+
+
+def _mixed_fixture_1d(seed=5, n=4096):
+    rng = np.random.default_rng(seed)
+    x = np.empty(n, np.float64)
+    q = n // 4
+    x[:q] = np.cumsum(rng.standard_normal(q)) * 0.3
+    t = np.arange(q, dtype=np.float64)
+    x[q : 2 * q] = 1e-4 * t * t
+    x[2 * q : 3 * q] = np.sin(0.93 * np.pi * t) + 0.01 * rng.standard_normal(q)
+    x[3 * q :] = 0.0
+    return x.astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "fixture",
+    [_mixed_fixture_1d(), _mixed_fixture_2d(), None],
+    ids=["mixed1d", "mixed2d", "hybrid_turf"],
+)
+def test_hybrid_payload_never_trails_best_single_predictor(fixture):
+    """(b): per-block selection must not lose >5% to any of its candidates."""
+    if fixture is None:
+        fixture = _hybrid_turf_1d()
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    hybrid_len = len(sz3_hybrid().compress(fixture, conf).blob)
+    singles = {
+        name: len(PIPELINES[name]().compress(fixture, conf).blob)
+        for name in SINGLE_PREDICTOR
+    }
+    best = min(singles.values())
+    assert hybrid_len <= 1.05 * best, (hybrid_len, singles)
+
+
+def _hybrid_turf_1d(n=8192, seed=0):
+    """Regime mix the per-block contest wins outright: piecewise-constant
+    steps (Lorenzo-exact, DCT rings), sparse spikes on a zero background
+    (DCT spreads them across every band), a quadratic ramp (order-2 Lorenzo
+    exact) and a broadband chirp (no sparse band for the transform)."""
+    rng = np.random.default_rng(seed)
+    x = np.empty(n, np.float64)
+    q = n // 4
+    x[:q] = np.repeat(rng.standard_normal(q // 64), 64)[:q] * 5
+    s = np.zeros(q)
+    m = rng.random(q) < 0.03
+    s[m] = rng.standard_normal(int(m.sum())) * 50
+    x[q : 2 * q] = s
+    t = np.arange(q, dtype=np.float64)
+    x[2 * q : 3 * q] = 1e-4 * t * t
+    x[3 * q :] = np.sin(2e-4 * t * t) * 2
+    return x.astype(np.float32)
+
+
+@pytest.mark.parametrize("workers", [2, 3])
+def test_worker_byte_identity_with_hybrid_chunks(workers):
+    """(c): containers routing chunks through the new engine must be
+    byte-identical across worker counts (selection is a pure function of the
+    chunk; assembly is submission-ordered)."""
+    x = np.concatenate([_hybrid_turf_1d(seed=s) for s in range(4)])
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    serial = sz3_auto(chunk_bytes=8192 * 4, workers=1).compress(
+        x, conf, with_stats=True
+    )
+    parallel = sz3_auto(chunk_bytes=8192 * 4, workers=workers).compress(x, conf)
+    assert serial.blob == parallel.blob
+    # the fixture's chunks are mixed-regime, so the contest must actually
+    # route at least one chunk through the new engine for (c) to mean much
+    picked = [c["pipeline"] for c in serial.meta["chunks"]]
+    assert "sz3_hybrid" in picked, picked
+
+
+def test_hybrid_only_chunked_worker_identity():
+    """A chunked container restricted to the new engine: byte-identity and
+    per-chunk hybrid blobs that decode through the v5 path."""
+    from repro.core import parse_header
+
+    x = np.concatenate([_mixed_fixture_1d(seed=s, n=8192) for s in range(3)])
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-4)
+    eng1 = sz3_chunked(candidates=("sz3_hybrid",), chunk_bytes=8192 * 4, workers=1)
+    eng3 = sz3_chunked(candidates=("sz3_hybrid",), chunk_bytes=8192 * 4, workers=3)
+    b1 = eng1.compress(x, conf).blob
+    assert b1 == eng3.compress(x, conf).blob
+    header, _ = parse_header(b1)
+    assert all(c["pipeline"] == "sz3_hybrid" for c in header["chunks"])
+    xhat = decompress(b1)
+    bound = 1e-4 * float(x.max() - x.min())
+    assert np.abs(xhat.astype(np.float64) - x).max() <= bound * (1 + 1e-9)

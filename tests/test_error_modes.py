@@ -33,12 +33,13 @@ MATRIX_PIPELINES = {
     "sz3_lr": {},
     "sz3_interp": {},
     "sz3_transform": {},
+    "sz3_hybrid": {},
     "sz3_auto": {"chunk_bytes": 1 << 15},
     "sz3_pwr": {"chunk_bytes": 1 << 15},
 }
 
 #: pipelines that honour PW_REL natively (log-composed side channels)
-PW_REL_NATIVE = {"sz3_auto", "sz3_pwr", "sz3_chunked"}
+PW_REL_NATIVE = {"sz3_auto", "sz3_pwr", "sz3_chunked", "sz3_hybrid"}
 
 #: pipelines that only accept PW_REL configs (first-class PW_REL engine)
 PW_REL_ONLY = {"sz3_pwr"}
@@ -52,6 +53,7 @@ NONFINITE_EXACT = {
     "sz3_lr",
     "sz3_interp",
     "sz3_transform",
+    "sz3_hybrid",
     "sz3_auto",
 }
 
@@ -78,6 +80,22 @@ def _fixtures():
     nonfinite[3, 4] = np.nan
     nonfinite[10, 11] = np.inf
     nonfinite[20, 2] = -np.inf
+    # block-boundary-straddling discontinuities on a blocksize±1-sized array:
+    # the hybrid engine tiles 2-D data into 16x16 blocks, so (33, 17) forces
+    # one-past-the-edge tiles on BOTH axes, and the steps sit exactly ON the
+    # 16-boundaries (the classic off-by-one tiling bug bait)
+    straddle = _smooth((33, 17), seed=3, dtype=np.float64) * 0.5
+    straddle[16:, :] += 100.0
+    straddle[:, 16:] -= 75.0
+    straddle[32, :] *= -1.0  # the single-row tail tile
+    # denormals scattered through a normal-scale field: ABS/REL must absorb
+    # them into the quantization grid, PW_REL must reconstruct them exactly
+    # (the LogTransform raw side channel — no log-domain bound survives the
+    # exp2 + cast back at subnormal scale)
+    denormal = _smooth((40, 20), seed=4, dtype=np.float64) + 4.0
+    denormal[::7, 3] = 5e-324  # smallest positive float64 subnormal
+    denormal[1::7, 4] = -2.5e-310
+    denormal[2::11, 5] = float(np.finfo(np.float32).tiny) / 8  # f32-subnormal
     del rng
     return {
         "smooth": smooth,
@@ -85,6 +103,8 @@ def _fixtures():
         "constant": constant,
         "zero_crossing": zero_crossing,
         "nonfinite": nonfinite,
+        "straddle": straddle,
+        "denormal": denormal,
     }
 
 
