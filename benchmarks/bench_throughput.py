@@ -30,6 +30,7 @@ from repro.core import (
     metrics,
     sz3_auto,
     sz3_chunked,
+    sz3_fast,
     sz3_hybrid,
     sz3_interp,
     sz3_lorenzo,
@@ -279,6 +280,43 @@ def hybrid_rows(full: bool = False, seed: int = 3):
     }
 
 
+def fast_rows(full: bool = False, seed: int = 3):
+    """SZx-style fixed-length tier (PR6 acceptance): compress/decompress
+    throughput and the speedup over the chunked Lorenzo pipeline at the SAME
+    absolute bound, bound verified pointwise.  The MB/s numbers feed the
+    ABSOLUTE floors in check_regression.py (tuned well under any CI machine's
+    capability), the speedup is machine-relative and gated at >= 5x."""
+    n = (1 << 24) if full else (1 << 22)  # 64MB / 16MB float32
+    rng = np.random.default_rng(seed)
+    data = np.cumsum(rng.standard_normal(n).astype(np.float32)).astype(
+        np.float32
+    )
+    eb = 1e-3
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb)
+    mb = data.nbytes / 1e6
+    comp_f = sz3_fast()
+    t_enc, res_f = _best(lambda: comp_f.compress(data, conf), repeats=3)
+    t_dec, xhat = _best(lambda: decompress(res_f.blob), repeats=3)
+    bound_ok = float(
+        np.abs(xhat.astype(np.float64) - data).max() <= eb * (1 + 1e-9)
+    )
+    # reference: the chunked engine pinned to the Lorenzo pipeline (the
+    # throughput-oriented prediction configuration)
+    eng = ChunkedCompressor(candidates=("sz3_lorenzo",), chunk_bytes=1 << 22)
+    t_ch, res_ch = _best(lambda: eng.compress(data, conf), repeats=1)
+    return {
+        "data_MB": round(mb, 1),
+        "eb_abs": eb,
+        "fast_compress_MBps": round(mb / t_enc, 1),
+        "fast_decompress_MBps": round(mb / t_dec, 1),
+        "fast_ratio": round(res_f.ratio, 2),
+        "chunked_compress_MBps": round(mb / t_ch, 1),
+        "chunked_ratio": round(res_ch.ratio, 2),
+        "speedup_vs_chunked": round(t_ch / t_enc, 2),
+        "bound_ok": bound_ok,
+    }
+
+
 def perf_rows(full: bool = False):
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
@@ -288,6 +326,7 @@ def perf_rows(full: bool = False):
         "transform": transform_rows(full),
         "quality": quality_rows(full),
         "hybrid": hybrid_rows(full),
+        "fast": fast_rows(full),
     }
 
 
@@ -304,6 +343,7 @@ def run(fields=None, seed: int = 3, repeats: int = 1):
             ("SZ3-Interp", sz3_interp()),
             ("SZ3-Transform", sz3_transform()),
             ("SZ3-Hybrid(blockwise)", sz3_hybrid()),
+            ("SZ3-Fast(fixed-length)", sz3_fast()),
             ("SZ3-Chunked(adaptive)", sz3_chunked(chunk_bytes=1 << 21)),
             ("SZ3-Auto(pred+transform+hybrid)", sz3_auto(chunk_bytes=1 << 21)),
         ]:

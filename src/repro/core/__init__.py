@@ -40,6 +40,12 @@ from .chunking import (
 from . import transform
 from . import blockwise  # noqa: I001  (blockwise must import after transform:
 # it registers sz3_hybrid and appends it to transform.AUTO_CANDIDATES)
+from . import fastmode  # noqa: I001  (fastmode must import after transform:
+# it registers sz3_fast and appends it to transform.AUTO_CANDIDATES)
+from .fastmode import (
+    FastModeCompressor,
+    sz3_fast,
+)
 from .transform import (  # noqa: I001  (re-export AFTER blockwise extends it)
     AUTO_CANDIDATES,
     TransformCompressor,
@@ -93,6 +99,9 @@ __all__ = [
     "BlockHybridCompressor",
     "sz3_hybrid",
     "blockwise",
+    "FastModeCompressor",
+    "sz3_fast",
+    "fastmode",
     "compress_stream",
     "decompress_stream",
     "decompress_chunk",

@@ -303,6 +303,11 @@ class BlockHybridCompressor:
             "eb": float(conf.eb),
             "abs_eb": float(abs_eb),
             "n_codes": int(codes.size),
+            **(
+                {"eb_rel": float(conf.eb_rel)}
+                if conf.eb_rel is not None
+                else {}
+            ),
             "enc_len": len(enc_bytes),
             "q_len": len(q_bytes),
             "tag_len": len(tag_bytes),

@@ -199,6 +199,26 @@ def _make_pipeline(name: str):
 #: go to a trial-compression runoff on the sample
 RUNOFF_MARGIN = 1.3
 
+#: nominal compress throughput per pipeline (MB/s, bench box, BENCH_PR5/PR6
+#: order of magnitude) — the ``speed_tier="throughput"`` cost model's price
+#: list.  Only RATIOS between entries matter, so the table survives machine
+#: differences; unknown candidates get the conservative default.
+PIPELINE_MBPS = {
+    "sz3_fast": 200.0,
+    "sz3_lorenzo": 25.0,
+    "sz3_transform": 25.0,
+    "sz3_chunked": 20.0,
+    "sz3_lr": 12.0,
+    "sz3_interp": 12.0,
+    "sz3_hybrid": 9.0,
+}
+_MBPS_DEFAULT = 12.0
+
+#: assumed downstream bandwidth (MB/s) the compressed bytes must traverse —
+#: the exchange rate between code-bits and compute seconds in throughput
+#: mode: total cost/MB = compress time + transfer time of the coded bytes
+LINK_MBPS = 100.0
+
 #: below this many estimated bits/element the data is trivially compressible
 #: by every close candidate — estimates alone decide, skipping the runoff
 TRIVIAL_BITS = 0.05
@@ -217,6 +237,7 @@ def select_pipeline(
     conf: CompressionConfig,
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
     pipelines: Optional[Dict[str, Any]] = None,
+    speed_tier: str = "ratio",
 ) -> Tuple[str, Dict[str, float]]:
     """Pick the candidate pipeline with the lowest estimated cost on a sample.
 
@@ -236,6 +257,15 @@ def select_pipeline(
     go straight to the trial stage.  ``pipelines`` lets callers pass
     pre-built instances keyed by name (avoids per-chunk reconstruction).
     Returns (winner, stage-1 scores).
+
+    ``speed_tier="throughput"`` changes the objective from bits/element to
+    estimated wall seconds per MB end-to-end: each candidate is priced at
+    ``1/PIPELINE_MBPS[name]`` (compute) plus the estimated coded size
+    transferred over a ``LINK_MBPS`` downstream link — so a fixed-length
+    coder like ``sz3_fast`` wins unless an entropy-coded candidate buys
+    enough ratio to pay back its slower pass.  No trial runoff in this mode
+    (a trial compression would cost more than it saves at throughput-tier
+    priorities); estimator-less candidates are priced at raw size.
     """
     if len(candidates) == 1:
         return candidates[0], {candidates[0]: 0.0}
@@ -252,6 +282,16 @@ def select_pipeline(
             pred = getattr(pipelines[name], "predictor", None)
             est_fn = pred.estimate_error if pred is not None else None
         ests[name] = est_fn(sample, abs_eb, conf) if est_fn is not None else None
+    if speed_tier == "throughput":
+        itembits = 8.0 * np.asarray(chunk).dtype.itemsize
+        costs = {}
+        for name in candidates:
+            bits = ests[name] if ests[name] is not None else itembits
+            ratio_frac = min(1.0, float(bits) / itembits)  # coded MB per raw MB
+            mbps = PIPELINE_MBPS.get(name, _MBPS_DEFAULT)
+            costs[name] = 1.0 / mbps + ratio_frac / LINK_MBPS
+        winner = min(candidates, key=lambda n: (costs[n], candidates.index(n)))
+        return winner, costs
     estimated = {k: float(v) for k, v in ests.items() if v is not None}
     finalists = [k for k, v in ests.items() if v is None]  # no estimator -> runoff
     if estimated:
@@ -312,11 +352,21 @@ class ChunkedCompressor:
         chunk_bytes: int = 1 << 22,
         conf: Optional[CompressionConfig] = None,
         workers: int = 1,
+        speed_tier: str = "ratio",
     ):
-        self.candidates = tuple(candidates)
+        if speed_tier not in ("ratio", "throughput"):
+            raise ValueError(f"unknown speed_tier {speed_tier!r}")
+        candidates = tuple(candidates)
+        if speed_tier == "throughput" and "sz3_fast" not in candidates:
+            # the throughput tier prices encode speed, so the fixed-length
+            # coder always belongs in the contest — a candidate list that
+            # predates the fast tier would otherwise make the knob a no-op
+            candidates += ("sz3_fast",)
+        self.candidates = candidates
         self.chunk_bytes = int(chunk_bytes)
         self.conf = conf or CompressionConfig()
         self.workers = max(1, int(workers))
+        self.speed_tier = speed_tier
 
     # -- shared per-chunk path ----------------------------------------------
     def _pwr_candidates(self) -> Tuple[str, ...]:
@@ -359,14 +409,15 @@ class ChunkedCompressor:
             sel_conf = eff.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
             name, _scores = select_pipeline(
                 pre_mod.log_domain_view(chunk), abs_eb, sel_conf, cands,
-                pipelines=pipelines,
+                pipelines=pipelines, speed_tier=self.speed_tier,
             )
             comp = pipelines[name]
             comp.preprocessor = pre_mod.LogTransform()
             return comp.compress(chunk, eff).blob, name, n0
         pipelines = {name: _make_pipeline(name) for name in self.candidates}
         name, _scores = select_pipeline(
-            chunk, abs_eb, eff, self.candidates, pipelines=pipelines
+            chunk, abs_eb, eff, self.candidates, pipelines=pipelines,
+            speed_tier=self.speed_tier,
         )
         blob = pipelines[name].compress(chunk, eff).blob
         return blob, name, n0
@@ -461,6 +512,8 @@ def _assemble_v2(
         "eb": float(conf.eb),
         "chunks": [r.to_header() for r in records],
     }
+    if conf.eb_rel is not None:
+        header["eb_rel"] = float(conf.eb_rel)
     if header_extra:
         header.update(pl_mod._clean_meta(header_extra))
     return pack_container(header, b"".join(body_parts))
@@ -617,6 +670,8 @@ def _pipeline_name_from_spec(spec: Dict[str, Any]) -> str:
         return "sz3_transform"
     if spec.get("kind") == "hybrid":
         return "sz3_hybrid"
+    if spec.get("kind") == "fast":
+        return "sz3_fast"
     pred = spec.get("predictor")
     if pred == "composite":
         return "sz3_lr"

@@ -15,15 +15,23 @@ from typing import Any, Mapping, Optional, Tuple
 class ErrorBoundMode(enum.Enum):
     """How the user-specified error bound is interpreted.
 
-    ABS     : max |x - x_hat| <= eb
-    REL     : max |x - x_hat| <= eb * (max(x) - min(x))   (value-range relative)
-    PW_REL  : |x_i - x_hat_i| <= eb * |x_i|  for every i  (point-wise relative,
-              realized via the logarithmic-transform preprocessor, paper §3.2)
+    ABS         : max |x - x_hat| <= eb
+    REL         : max |x - x_hat| <= eb * (max(x) - min(x))   (value-range relative)
+    PW_REL      : |x_i - x_hat_i| <= eb * |x_i|  for every i  (point-wise relative,
+                  realized via the logarithmic-transform preprocessor, paper §3.2)
+    ABS_AND_REL : both bounds hold — resolves to min(eb, eb_rel * range)
+    ABS_OR_REL  : the looser bound suffices — resolves to max(eb, eb_rel * range)
+
+    The composite modes (SZ convention: ``errorBoundMode = ABS_AND_REL`` /
+    ``ABS_OR_REL``) carry the absolute bound in ``eb`` and the range-relative
+    fraction in ``eb_rel``.
     """
 
     ABS = "abs"
     REL = "rel"
     PW_REL = "pw_rel"
+    ABS_AND_REL = "abs-and-rel"
+    ABS_OR_REL = "abs-or-rel"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +41,10 @@ class CompressionConfig:
     Attributes
     ----------
     mode:         error bound interpretation (see :class:`ErrorBoundMode`).
-    eb:           the user error bound in the units implied by ``mode``.
+    eb:           the user error bound in the units implied by ``mode``.  For
+                  the composite modes this is the ABSOLUTE half of the pair.
+    eb_rel:       the range-relative fraction for the composite modes
+                  (``abs-and-rel`` / ``abs-or-rel``); ignored elsewhere.
     quant_radius: half-width of the quantization code range.  Codes live in
                   ``[1, 2*quant_radius - 1]`` with ``quant_radius`` = "diff 0";
                   code 0 is reserved for unpredictable points (SZ convention).
@@ -54,6 +65,7 @@ class CompressionConfig:
 
     mode: ErrorBoundMode = ErrorBoundMode.ABS
     eb: float = 1e-3
+    eb_rel: Optional[float] = None
     quant_radius: int = 32768
     block_size: int = 6
     pattern_size: Optional[int] = None
@@ -85,6 +97,17 @@ class CompressionConfig:
             return float(self.eb)
         if self.mode == ErrorBoundMode.REL:
             return float(self.eb) * float(value_range)
+        if self.mode in (ErrorBoundMode.ABS_AND_REL, ErrorBoundMode.ABS_OR_REL):
+            if self.eb_rel is None:
+                raise ValueError(
+                    f"mode {self.mode.value!r} needs both bounds: set eb to "
+                    "the absolute bound and eb_rel to the range-relative "
+                    "fraction"
+                )
+            rel = float(self.eb_rel) * float(value_range)
+            if self.mode == ErrorBoundMode.ABS_AND_REL:
+                return min(float(self.eb), rel)
+            return max(float(self.eb), rel)
         if self.mode == ErrorBoundMode.PW_REL:
             if not allow_conservative:
                 raise ValueError(

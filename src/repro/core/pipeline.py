@@ -171,6 +171,11 @@ class SZ3Compressor:
             "eb": float(conf.eb),
             "abs_eb": float(abs_eb),
             "block_size": int(conf2.block_size),
+            **(
+                {"eb_rel": float(conf.eb_rel)}
+                if conf.eb_rel is not None
+                else {}
+            ),
             "interp_kind": conf2.interp_kind,
             "lorenzo_order": int(conf2.lorenzo_order),
             "n_codes": int(codes.size),
@@ -222,8 +227,10 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     multi-chunk blobs (per-chunk spec + offsets; see chunking.py), v3
     blockwise-transform blobs, v4 pointwise-relative multi-chunk blobs
     (kind "pwr": chunk blobs carry log-domain side channels in their
-    pre_meta), and v5 block-hybrid blobs (kind "hybrid": per-block
-    predictor tags + coefficient side channels; see blockwise.py).
+    pre_meta), v5 block-hybrid blobs (kind "hybrid": per-block predictor
+    tags + coefficient side channels; see blockwise.py), and v6 fast-tier
+    blobs (kind "fast": fixed-length truncated-bitplane blocks; see
+    fastmode.py).
     ``workers`` parallelizes multi-chunk decode (ignored for
     single-pipeline blobs).
     """
@@ -243,6 +250,10 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
         from .blockwise import BlockHybridCompressor  # local: avoids import cycle
 
         return BlockHybridCompressor._decompress_body(blob, header, body_off)
+    if spec["kind"] == "fast":  # v6 SZx-style fixed-length containers
+        from .fastmode import FastModeCompressor  # local: avoids import cycle
+
+        return FastModeCompressor._decompress_body(blob, header, body_off)
     comp = SZ3Compressor.from_spec(spec)
     body = comp.lossless.decompress(blob[body_off:])
     enc_bytes = body[: header["enc_len"]]

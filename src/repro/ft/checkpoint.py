@@ -132,17 +132,20 @@ def encode_leaf(
             return res.blob, meta
         conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=pol.rel_eb)
         if arr.nbytes >= _CHUNKED_MIN_BYTES:
-            # all three coder families contest per chunk: optimizer moments
-            # are usually Lorenzo-friendly, attention-derived leaves can be
-            # oscillatory along the feature axis (transform wins those), and
+            # every coder family contests per chunk: optimizer moments are
+            # usually Lorenzo-friendly, attention-derived leaves can be
+            # oscillatory along the feature axis (transform wins those),
             # leaves mixing regimes — embedding tables with hot/cold rows,
-            # moments with dead blocks — go to the block-hybrid engine
+            # moments with dead blocks — go to the block-hybrid engine, and
+            # near-constant slabs (zero-init moments) let the fixed-length
+            # fast tier win on its constant-block path
             comp = ChunkedCompressor(
                 candidates=(
                     "sz3_lorenzo",
                     "sz3_lr",
                     "sz3_transform",
                     "sz3_hybrid",
+                    "sz3_fast",
                 ),
                 workers=_CHUNK_WORKERS if workers is None else workers,
             )

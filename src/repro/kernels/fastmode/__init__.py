@@ -1,0 +1,7 @@
+"""Fused classify+reduce kernel for the SZx-style fast tier (core/fastmode).
+
+``kernel.py`` holds the Pallas TPU kernel, ``ref.py`` the pure-jnp oracle the
+kernel is verified against, ``ops.py`` the jit'd host-array wrappers with
+padding and backend selection (same layout as kernels/lorenzo and
+kernels/transform).
+"""

@@ -1,0 +1,20 @@
+"""Reference oracle for the fast-tier classify+reduce stage.
+
+Pure jax.numpy, no Pallas: per 256/128-element block, the mean and the
+maximum absolute deviation FROM THAT MEAN — the two reductions the SZx-style
+coder classifies constant blocks with.  The kernel in ``kernel.py`` must
+match this to float32 rounding; the host numpy path in core/fastmode.py is
+the float64 ground truth both approximate (and which re-verifies every
+constant classification, so oracle drift can cost ratio but never the bound).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_stats(x: jnp.ndarray):
+    """(nb, bs) float32 -> (means (nb,), max |x - mean| (nb,)) in float32."""
+    x = jnp.asarray(x, jnp.float32)
+    means = jnp.mean(x, axis=1)
+    dev = jnp.max(jnp.abs(x - means[:, None]), axis=1)
+    return means, dev

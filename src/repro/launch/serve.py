@@ -29,14 +29,15 @@ def main():
     ap.add_argument(
         "--offload-kv",
         default="none",
-        choices=["none", "chunked", "auto", "hybrid", "quality"],
+        choices=["none", "chunked", "auto", "hybrid", "quality", "fast"],
         help="'chunked': prediction-pipeline candidates only; 'auto': adds "
         "the sz3_transform and sz3_hybrid candidates (KV channels are often "
         "oscillatory, and mixed hot/cold sequences suit per-block "
         "selection); 'hybrid': the block-hybrid engine only (per-block "
         "predictor selection inside every chunk); 'quality': closed-loop "
         "rate control to --offload-psnr dB instead of a hand-picked error "
-        "bound",
+        "bound; 'fast': the SZx-style fixed-length tier only — lowest "
+        "latency on the eviction path, trading ratio for speed",
     )
     ap.add_argument("--offload-eb", type=float, default=1e-3)
     ap.add_argument(
@@ -79,12 +80,14 @@ def main():
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", seqs[0][:12].tolist())
-    if args.offload_kv in ("chunked", "auto", "hybrid", "quality"):
+    if args.offload_kv in ("chunked", "auto", "hybrid", "quality", "fast"):
         candidates = None
         if args.offload_kv == "auto":
             candidates = "auto"
         elif args.offload_kv == "hybrid":
             candidates = ("sz3_hybrid",)
+        elif args.offload_kv == "fast":
+            candidates = ("sz3_fast",)
         offload_cache(
             cache,
             eb=args.offload_eb,

@@ -35,6 +35,7 @@ from repro.core import (  # noqa: E402
     predictors,
     preprocess,
     sz3_chunked,
+    sz3_fast,
     sz3_hybrid,
     sz3_lorenzo,
     sz3_lr,
@@ -132,6 +133,31 @@ def main():
     )
     c[16:32, :] = 0.0
     emit("v5_hybrid_const_rel", sz3_hybrid().compress(c, rel_conf).blob)
+
+    # v6 fast tier, mixed fixture: constant blocks, nonconstant blocks at
+    # several widths, a non-finite triple and a tail block — pins the const
+    # bitmap, the width-pooled plane layout, the fail channel and the edge
+    # padding all in one blob
+    rng = np.random.default_rng(18)
+    f = np.concatenate(
+        [
+            np.full(512, -1.75),
+            np.cumsum(rng.standard_normal(512)),
+            np.cumsum(rng.standard_normal(512)) * 40.0,  # wider planes
+            np.zeros(256),
+            np.cumsum(rng.standard_normal(37)),  # tail block (edge padded)
+        ]
+    ).astype(np.float32)
+    f[700] = np.nan
+    f[701] = np.inf
+    f[1500] = -np.inf
+    emit("v6_fast_mixed_abs", sz3_fast().compress(f, abs_conf).blob)
+
+    # v6 constant fixture under REL: range 0 resolves to a tiny abs bound,
+    # so every block must take the mean-only constant path — pins the
+    # all-const body layout (bitmap + means, no width/plane sections)
+    g = np.full(2100, 2.5, np.float32)
+    emit("v6_fast_const_rel", sz3_fast().compress(g, rel_conf).blob)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,126 @@
+"""Tests for the numcodecs-compatible codec facade (``repro.codec``).
+
+The ``Sz3Codec`` class works as a plain object without numcodecs installed
+(encode/decode/get_config/from_config are self-contained), so the contract
+tests below always run; the zarr round-trip integration test is gated on the
+optional stack being importable.
+"""
+import numpy as np
+import pytest
+
+from repro.codec import Sz3Codec
+
+
+def _smooth(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    for ax in range(x.ndim):
+        x = np.cumsum(x, axis=ax)
+    return np.ascontiguousarray(x.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# plain-object contract (no numcodecs required)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kwargs,tol_of",
+    [
+        ({"eb_mode": "abs", "eb_abs": 1e-3}, lambda x: 1e-3),
+        ({"eb_mode": "rel", "eb_rel": 1e-4}, lambda x: 1e-4 * np.ptp(x)),
+        (
+            {"eb_mode": "abs-and-rel", "eb_abs": 1e-3, "eb_rel": 1e-4},
+            lambda x: min(1e-3, 1e-4 * np.ptp(x)),
+        ),
+        (
+            {"eb_mode": "abs", "eb_abs": 1e-3, "predictor": "fast"},
+            lambda x: 1e-3,
+        ),
+        (
+            {"eb_mode": "abs", "eb_abs": 1e-3, "predictor": "hybrid"},
+            lambda x: 1e-3,
+        ),
+    ],
+)
+def test_encode_decode_bound(kwargs, tol_of):
+    codec = Sz3Codec(**kwargs)
+    x = _smooth((64, 48), seed=3)
+    out = np.asarray(codec.decode(codec.encode(x)))
+    assert out.shape == x.shape and out.dtype == x.dtype
+    tol = tol_of(np.asarray(x, np.float64))
+    assert np.abs(out.astype(np.float64) - x).max() <= tol * (1 + 1e-6)
+
+
+def test_pw_rel_bound_nonzero_pointwise():
+    codec = Sz3Codec(eb_mode="pw_rel", eb_rel=1e-3)
+    rng = np.random.default_rng(5)
+    x = np.exp(rng.normal(0, 2, 4000)).astype(np.float32)
+    x[rng.random(4000) < 0.3] *= -1
+    x[::97] = 0.0
+    out = np.asarray(codec.decode(codec.encode(x)))
+    nz = x != 0
+    rel = np.abs(out[nz].astype(np.float64) - x[nz]) / np.abs(x[nz])
+    assert rel.max() <= 1e-3 * (1 + 1e-6)
+    assert np.all(out[~nz] == 0.0)
+
+
+def test_decode_into_out_buffer():
+    codec = Sz3Codec(eb_mode="abs", eb_abs=1e-3)
+    x = _smooth((1000,), seed=1)
+    blob = codec.encode(x)
+    out = np.empty_like(x)
+    ret = codec.decode(blob, out=out)
+    assert ret is out
+    assert np.abs(out - x).max() <= 1e-3 * (1 + 1e-6)
+    buf = bytearray(x.nbytes)
+    codec.decode(blob, out=buf)
+    assert np.abs(np.frombuffer(buf, x.dtype) - x).max() <= 1e-3 * (1 + 1e-6)
+
+
+def test_config_roundtrip_identity():
+    codec = Sz3Codec(
+        eb_mode="abs-or-rel", eb_abs=2e-3, eb_rel=1e-5, predictor="fast"
+    )
+    cfg = codec.get_config()
+    assert cfg["id"] == "repro.sz3"
+    clone = Sz3Codec.from_config(cfg)
+    assert clone.get_config() == cfg
+    x = _smooth((500,), seed=2)
+    assert clone.decode(codec.encode(x)) is not None
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        {"eb_mode": "nope"},
+        {"predictor": "nope"},
+        {"eb_mode": "abs-and-rel"},  # composite without eb_rel
+        {"eb_mode": "psnr"},  # psnr without eb_psnr
+    ],
+)
+def test_validation_rejections(bad):
+    with pytest.raises(ValueError):
+        Sz3Codec(**bad)
+
+
+def test_non_float_buffer_rejected():
+    codec = Sz3Codec()
+    with pytest.raises((TypeError, ValueError)):
+        codec.encode(np.array(["a", "b"]))
+
+
+# ---------------------------------------------------------------------------
+# zarr integration (optional stack)
+# ---------------------------------------------------------------------------
+def test_zarr_roundtrip():
+    pytest.importorskip("numcodecs")
+    zarr = pytest.importorskip("zarr")
+
+    x = _smooth((128, 96), seed=9)
+    codec = Sz3Codec(eb_mode="abs", eb_abs=1e-3, predictor="fast")
+    try:
+        z = zarr.array(x, chunks=(64, 48), compressor=codec)
+    except TypeError:  # zarr v3 spells the kwarg differently
+        z = zarr.array(x, chunks=(64, 48), compressors=[codec])
+    out = np.asarray(z[:])
+    assert out.shape == x.shape
+    assert np.abs(out.astype(np.float64) - x).max() <= 1e-3 * (1 + 1e-6)

@@ -31,6 +31,8 @@ EXPECTED_GENERATIONS = {
     "v4_pwr": (4, "pwr"),
     "v5_hybrid_mixed_abs": (5, "hybrid"),
     "v5_hybrid_const_rel": (5, "hybrid"),
+    "v6_fast_mixed_abs": (6, "fast"),
+    "v6_fast_const_rel": (6, "fast"),
 }
 
 

@@ -13,7 +13,9 @@ silently break:
       through the new engine (parallel output == serial output, bit for bit).
 
 Engines: ``sz3_hybrid`` (v5), ``sz3_chunked`` (v2), ``sz3_auto`` (v2 with
-the full candidate set incl. hybrid), ``sz3_pwr`` (v4, PW_REL only).
+the full candidate set incl. hybrid), ``sz3_pwr`` (v4, PW_REL only) and
+``sz3_fast`` (v6, the fixed-length ultra-fast tier — it trades ratio for
+speed but must honour exactly the same pointwise bounds).
 """
 import numpy as np
 import pytest
@@ -33,6 +35,7 @@ from repro.core import (
     decompress,
     sz3_auto,
     sz3_chunked,
+    sz3_fast,
     sz3_hybrid,
     sz3_pwr,
 )
@@ -128,6 +131,7 @@ def _differential_case(x, mode, eb):
         "sz3_hybrid": sz3_hybrid(),
         "sz3_chunked": sz3_chunked(chunk_bytes=1 << 13),
         "sz3_auto": sz3_auto(chunk_bytes=1 << 13),
+        "sz3_fast": sz3_fast(),
     }
     if mode == ErrorBoundMode.PW_REL:
         engines["sz3_pwr"] = sz3_pwr(eb=eb, chunk_bytes=1 << 13)
@@ -260,6 +264,34 @@ def test_worker_byte_identity_with_hybrid_chunks(workers):
     # route at least one chunk through the new engine for (c) to mean much
     picked = [c["pipeline"] for c in serial.meta["chunks"]]
     assert "sz3_hybrid" in picked, picked
+
+
+@pytest.mark.parametrize("workers", [2, 3])
+def test_fast_only_chunked_worker_identity(workers):
+    """(c) for the fast tier: a chunked container restricted to ``sz3_fast``
+    must be byte-identical across worker counts, every chunk must carry a v6
+    body, and the fixed-length payload must stay sane — smaller than raw on a
+    smooth fixture, never more than marginally larger than the entropy-coded
+    chunked engine would allow on the same data times a generous factor."""
+    from repro.core import parse_header
+
+    x = np.concatenate([_mixed_fixture_1d(seed=s, n=8192) for s in range(3)])
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    eng1 = sz3_chunked(candidates=("sz3_fast",), chunk_bytes=8192 * 4, workers=1)
+    engN = sz3_chunked(
+        candidates=("sz3_fast",), chunk_bytes=8192 * 4, workers=workers
+    )
+    b1 = eng1.compress(x, conf).blob
+    assert b1 == engN.compress(x, conf).blob
+    header, _ = parse_header(b1)
+    assert all(c["pipeline"] == "sz3_fast" for c in header["chunks"])
+    _assert_bound(ErrorBoundMode.ABS, 1e-3, x, decompress(b1), "fast_chunked")
+    # payload sanity: fixed-length coding beats raw on smooth data, and the
+    # ratio sacrificed vs the entropy-coded engine stays bounded (format
+    # still block-structured, not degenerate)
+    assert len(b1) < x.nbytes
+    chunked_len = len(sz3_chunked(chunk_bytes=8192 * 4).compress(x, conf).blob)
+    assert len(b1) <= 4.0 * chunked_len, (len(b1), chunked_len)
 
 
 def test_hybrid_only_chunked_worker_identity():

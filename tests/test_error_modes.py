@@ -34,12 +34,13 @@ MATRIX_PIPELINES = {
     "sz3_interp": {},
     "sz3_transform": {},
     "sz3_hybrid": {},
+    "sz3_fast": {},
     "sz3_auto": {"chunk_bytes": 1 << 15},
     "sz3_pwr": {"chunk_bytes": 1 << 15},
 }
 
 #: pipelines that honour PW_REL natively (log-composed side channels)
-PW_REL_NATIVE = {"sz3_auto", "sz3_pwr", "sz3_chunked", "sz3_hybrid"}
+PW_REL_NATIVE = {"sz3_auto", "sz3_pwr", "sz3_chunked", "sz3_hybrid", "sz3_fast"}
 
 #: pipelines that only accept PW_REL configs (first-class PW_REL engine)
 PW_REL_ONLY = {"sz3_pwr"}
@@ -54,6 +55,7 @@ NONFINITE_EXACT = {
     "sz3_interp",
     "sz3_transform",
     "sz3_hybrid",
+    "sz3_fast",
     "sz3_auto",
 }
 
@@ -194,6 +196,56 @@ def test_quality_pipeline_meets_psnr_floor(fixture):
         if rng > 0:
             measured = 20 * np.log10(rng) - 10 * np.log10(m)
             assert measured >= target - 1.0
+
+
+#: the engines the composite-mode contract is asserted against (the chunked
+#: families resolve composite bounds per call; the bare pipelines get them
+#: through the shared resolve_abs_eb, so a couple of each suffices)
+COMPOSITE_PIPELINES = {
+    "sz3_fast": {},
+    "sz3_lorenzo": {},
+    "sz3_hybrid": {},
+    "sz3_chunked": {"chunk_bytes": 1 << 15},
+}
+
+
+@pytest.mark.parametrize("fixture", ["smooth", "oscillatory", "straddle"])
+@pytest.mark.parametrize(
+    "mode", [ErrorBoundMode.ABS_AND_REL, ErrorBoundMode.ABS_OR_REL]
+)
+@pytest.mark.parametrize("name", sorted(COMPOSITE_PIPELINES))
+def test_composite_modes(name, mode, fixture):
+    """abs-and-rel = min(eb_abs, eb_rel*range); abs-or-rel = max of the two —
+    asserted pointwise against independently computed bounds."""
+    x = FIXTURES[fixture]
+    eb_abs, eb_rel = 1e-3, 2e-5
+    comp = PIPELINES[name](**COMPOSITE_PIPELINES[name])
+    conf = CompressionConfig(mode=mode, eb=eb_abs, eb_rel=eb_rel)
+    res = comp.compress(x, conf)
+    xhat = decompress(res.blob)
+    assert xhat.shape == x.shape and xhat.dtype == x.dtype
+    x64 = np.asarray(x, np.float64)
+    fin = np.isfinite(x64)
+    rng = float(x64[fin].max() - x64[fin].min())
+    pick = min if mode == ErrorBoundMode.ABS_AND_REL else max
+    tol = pick(eb_abs, eb_rel * rng) * (1 + 1e-6)
+    err = np.abs(x64[fin] - np.asarray(xhat, np.float64)[fin]).max(initial=0.0)
+    assert err <= tol, f"{name}/{fixture}: {err} > {tol}"
+
+
+def test_composite_modes_require_eb_rel():
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS_AND_REL, eb=1e-3)
+    with pytest.raises(ValueError, match="eb_rel"):
+        conf.resolve_abs_eb(10.0, 5.0)
+
+
+def test_composite_mode_resolution_values():
+    c = CompressionConfig(mode=ErrorBoundMode.ABS_AND_REL, eb=1e-3, eb_rel=1e-5)
+    assert c.resolve_abs_eb(10.0, 5.0) == pytest.approx(1e-4)  # min wins
+    assert c.resolve_abs_eb(1000.0, 500.0) == pytest.approx(1e-3)
+    c = CompressionConfig(mode=ErrorBoundMode.ABS_OR_REL, eb=1e-3, eb_rel=1e-5)
+    assert c.resolve_abs_eb(10.0, 5.0) == pytest.approx(1e-3)  # max wins
+    assert c.resolve_abs_eb(1000.0, 500.0) == pytest.approx(1e-2)
 
 
 def test_pw_rel_conservative_fallback_is_opt_in():
