@@ -317,6 +317,86 @@ def fast_rows(full: bool = False, seed: int = 3):
     }
 
 
+def integrity_rows(full: bool = False, seed: int = 3):
+    """Cost of the integrity layer (PR7 acceptance): checksum trailers plus
+    strict verification, measured on the two tiers where overhead matters
+    most — the chunked engine (many per-chunk CRCs) and the fast tier (the
+    throughput-critical path, so fixed costs show up largest).  The GATED
+    overhead percentages time the ADDED work directly — trailer build on the
+    compress side, ``verify_container`` on the decompress side — against the
+    base-path timing: differencing two whole-path timings is too noisy on a
+    loaded 1-core runner to gate at 5%.  The on/off MBps rows stay as the
+    informational end-to-end view."""
+    from repro.core import integrity
+    from repro.core.pipeline import container_body, parse_header
+
+    rng = np.random.default_rng(seed)
+    out = {"checksum_algo": integrity.CHECKSUM_ALGO}
+    eb = 1e-3
+    conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=eb)
+    tiers = {
+        "chunked": (
+            ChunkedCompressor(chunk_bytes=1 << 21, workers=1),
+            np.cumsum(
+                rng.standard_normal(
+                    (256, 256, 64) if full else (128, 128, 64)
+                ).astype(np.float32),
+                axis=0,
+            ),
+        ),
+        "fast": (
+            sz3_fast(),
+            np.cumsum(
+                rng.standard_normal((1 << 24) if full else (1 << 22)).astype(
+                    np.float32
+                )
+            ).astype(np.float32),
+        ),
+    }
+    for tier, (comp, data) in tiers.items():
+        mb = data.nbytes / 1e6
+        with integrity.trailers_disabled():
+            t_c_off, res_off = _best(lambda: comp.compress(data, conf), repeats=3)
+        t_c_on, res_on = _best(lambda: comp.compress(data, conf), repeats=3)
+        t_d_off, x_off = _best(
+            lambda: decompress(res_on.blob, verify="off"), repeats=3
+        )
+        t_d_on, x_on = _best(
+            lambda: decompress(res_on.blob, verify="strict"), repeats=3
+        )
+        assert np.array_equal(x_off, x_on)
+        # the added work, timed in isolation (stable even under contention):
+        # compress side appends build_trailer, strict decode prepends
+        # verify_container — both relative to the integrity-off base timing
+        header, body_off = parse_header(res_on.blob)
+        head = res_on.blob[:body_off]
+        body = container_body(res_on.blob, body_off)
+        bounds = integrity.chunk_bounds_of(header, len(body))
+        t_trailer, _ = _best(
+            lambda: integrity.build_trailer(head, body, bounds), repeats=5
+        )
+        t_verify, _ = _best(
+            lambda: integrity.verify_container(res_on.blob, header, body_off),
+            repeats=5,
+        )
+        out[tier] = {
+            "data_MB": round(mb, 1),
+            "trailer_bytes": len(res_on.blob) - len(res_off.blob),
+            "compress_MBps_off": round(mb / t_c_off, 1),
+            "compress_MBps_on": round(mb / t_c_on, 1),
+            "decompress_MBps_off": round(mb / t_d_off, 1),
+            "decompress_MBps_strict": round(mb / t_d_on, 1),
+            "compress_overhead_pct": round(100 * t_trailer / t_c_off, 2),
+            "verify_overhead_pct": round(100 * t_verify / t_d_off, 2),
+            "compress_delta_pct": round(100 * (t_c_on / t_c_off - 1), 2),
+            "verify_delta_pct": round(100 * (t_d_on / t_d_off - 1), 2),
+            "size_overhead_pct": round(
+                100 * (len(res_on.blob) / len(res_off.blob) - 1), 3
+            ),
+        }
+    return out
+
+
 def perf_rows(full: bool = False):
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
@@ -327,6 +407,7 @@ def perf_rows(full: bool = False):
         "quality": quality_rows(full),
         "hybrid": hybrid_rows(full),
         "fast": fast_rows(full),
+        "integrity": integrity_rows(full),
     }
 
 

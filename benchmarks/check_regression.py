@@ -97,6 +97,31 @@ QUALITY_GATES = [
         "chunked engine absolute compress throughput floor (4 MB/s)",
         lambda v, perf: v >= 4.0,
     ),
+    # integrity layer (PR7): checksum trailers + strict verification must
+    # cost < 5% on both the chunked tier (many per-chunk CRCs) and the fast
+    # tier (throughput-critical, fixed costs loom largest).  Both timings in
+    # each pair come from the same run on the same machine, so the ratio is
+    # machine-independent; best-of-3 timing keeps jitter under the gate.
+    (
+        ("integrity", "chunked", "compress_overhead_pct"),
+        "integrity trailer compress overhead < 5% (chunked tier)",
+        lambda v, perf: v < 5.0,
+    ),
+    (
+        ("integrity", "chunked", "verify_overhead_pct"),
+        "strict-verify decompress overhead < 5% (chunked tier)",
+        lambda v, perf: v < 5.0,
+    ),
+    (
+        ("integrity", "fast", "compress_overhead_pct"),
+        "integrity trailer compress overhead < 5% (fast tier)",
+        lambda v, perf: v < 5.0,
+    ),
+    (
+        ("integrity", "fast", "verify_overhead_pct"),
+        "strict-verify decompress overhead < 5% (fast tier)",
+        lambda v, perf: v < 5.0,
+    ),
 ]
 
 

@@ -5,7 +5,15 @@ encoder -> lossless) composed per §3.3, plus the customized pipelines of §4
 (GAMESS / SZ3-Pastri), §5 (APS adaptive) and §6.2 (LR / Interp / Truncation).
 """
 from . import encoders, lossless, metrics, predictors, preprocess, quantizers
+from . import faults, integrity
 from .config import CompressionConfig, ErrorBoundMode
+from .integrity import (
+    ChunkDamage,
+    ContainerError,
+    IntegrityError,
+    SalvageReport,
+    verify_blob,
+)
 from .pipeline import (  # noqa: I001  (chunking must import after pipeline)
     PIPELINES,
     AdaptiveAPSCompressor,
@@ -67,6 +75,13 @@ from .quality import (  # noqa: I001  (quality must import after transform)
 __all__ = [
     "CompressionConfig",
     "ErrorBoundMode",
+    "ContainerError",
+    "IntegrityError",
+    "SalvageReport",
+    "ChunkDamage",
+    "verify_blob",
+    "integrity",
+    "faults",
     "SZ3Compressor",
     "TruncationCompressor",
     "AdaptiveAPSCompressor",

@@ -51,7 +51,8 @@ from . import preprocess as pre_mod
 from . import quantizers as quant_mod
 from . import transform as tr_mod
 from .config import CompressionConfig, ErrorBoundMode
-from .pipeline import CompressionResult, pack_container
+from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
+from .pipeline import CompressionResult, container_body, pack_container
 from .predictors import (
     _int_code_bits,
     _pack_mask,
@@ -390,22 +391,45 @@ class BlockHybridCompressor:
         spec = header["spec"]
         quantizer = quant_mod.make(spec["quantizer"], radius=spec["quant_radius"])
         encoder = enc_mod.make(spec["encoder"])
-        body = ll_mod.make(spec["lossless"]).decompress(blob[body_off:])
-        enc_len, q_len, tag_len = header["enc_len"], header["q_len"], header["tag_len"]
+        enc_len = guard_alloc(header["enc_len"], "enc_len")
+        q_len = guard_alloc(header["q_len"], "q_len")
+        tag_len = guard_alloc(header["tag_len"], "tag_len")
+        total = guard_alloc(enc_len + q_len + tag_len, "hybrid body")
+        body = ll_mod.make(spec["lossless"]).decompress_bounded(
+            container_body(blob, body_off), total
+        )
+        if len(body) != total:
+            raise ContainerError(
+                f"hybrid body decompressed to {len(body)} bytes; header "
+                f"declares {total} (enc+q+tag)"
+            )
         enc_bytes = body[:enc_len]
         q_bytes = body[enc_len : enc_len + q_len]
         tag_bytes = body[enc_len + q_len : enc_len + q_len + tag_len]
         pdtype = np.dtype(header["pdtype"])
         quantizer.begin(header["abs_eb"], pdtype)
         quantizer.load(q_bytes)
-        codes = np.asarray(encoder.decode(enc_bytes, header["n_codes"]))
         hm = header["hyb_meta"]
-        b = int(hm["bs"])
-        nb = int(hm["nb"])
-        n_reg = int(hm["n_reg"])
-        padded_shape = tuple(hm["padded_shape"])
-        work_shape = tuple(hm["work_shape"])
+        b = guard_count(hm["bs"], 1 << 12, "hybrid block side")
+        if b < 1:
+            raise ContainerError("corrupt hybrid container: block side < 1")
+        padded_shape = guard_shape(hm["padded_shape"], 8, "padded_shape")
+        work_shape = guard_shape(hm["work_shape"], 8, "work_shape")
         nd = len(padded_shape)
+        blk_elems = b**nd
+        nb_limit = int(np.prod(padded_shape, dtype=np.int64)) // max(1, blk_elems) + 1
+        nb = guard_count(hm["nb"], nb_limit, "hybrid block count")
+        n_reg = guard_count(hm["n_reg"], nb, "hybrid regression count")
+        guard_alloc(nb * blk_elems * 8, "hybrid block grid")
+        n_codes = guard_count(
+            header["n_codes"], 2 * nb * blk_elems + 4096, "n_codes"
+        )
+        codes = np.asarray(encoder.decode(enc_bytes, n_codes))
+        if tag_len != (nb + 3) // 4:
+            raise ContainerError(
+                f"corrupt hybrid container: tag channel holds {tag_len} "
+                f"bytes, {(nb + 3) // 4} expected for {nb} blocks"
+            )
         eb = quantizer.eb
         tags = _unpack_tags(tag_bytes, nb)
         use_reg = tags == TAG_REG

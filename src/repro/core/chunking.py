@@ -40,6 +40,7 @@ import collections
 import dataclasses
 import os
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import (
     Any,
     Callable,
@@ -57,9 +58,18 @@ from typing import (
 import msgpack
 import numpy as np
 
+from . import integrity
 from . import pipeline as pl_mod
 from . import preprocess as pre_mod
 from .config import CompressionConfig, ErrorBoundMode
+from .integrity import (
+    ChunkDamage,
+    ContainerError,
+    SalvageReport,
+    decode_errors,
+    guard_count,
+    guard_shape,
+)
 from .pipeline import CompressionResult, pack_container
 
 _STREAM_MAGIC = b"SZ3S"
@@ -81,7 +91,10 @@ _R = TypeVar("_R")
 
 
 def _parallel_map_ordered(
-    fn: Callable[[_T], _R], items: Iterable[_T], workers: int
+    fn: Callable[[_T], _R],
+    items: Iterable[_T],
+    workers: int,
+    timeout: Optional[float] = None,
 ) -> Iterator[_R]:
     """Apply ``fn`` across worker threads, yielding results in input order.
 
@@ -92,6 +105,15 @@ def _parallel_map_ordered(
     a view, but its compressed blob is retained until yielded).  Order is
     deterministic by construction (a result deque, not as-completed), so
     parallel output is byte-identical to serial output.
+
+    ``timeout`` (seconds) bounds the wait for each task's result.  A task
+    that blows the budget trips DEGRADED mode: its item — and every item not
+    yet submitted — is recomputed serially in the calling thread, queued
+    futures are cancelled, and the pool is abandoned without joining (a
+    worker thread wedged in a C extension cannot be interrupted; waiting on
+    it would turn one slow chunk into a hung pipeline).  Results and their
+    order are identical either way because ``fn`` is pure per item — only
+    the execution strategy degrades, never the output.
     """
     if workers <= 1:
         for item in items:
@@ -100,14 +122,36 @@ def _parallel_map_ordered(
     # CPU-bound tasks: more threads than cores is pure contention, so the
     # pool is clamped (the in-flight window still honours ``workers``)
     pool_size = max(1, min(workers, os.cpu_count() or workers))
-    with ThreadPoolExecutor(max_workers=pool_size) as pool:
-        pending = collections.deque()
-        for item in items:
-            pending.append(pool.submit(fn, item))
+    pool = ThreadPoolExecutor(max_workers=pool_size)
+    degraded = False
+    pending: "collections.deque" = collections.deque()
+
+    def _drain_one() -> _R:
+        nonlocal degraded
+        fut, item = pending.popleft()
+        try:
+            return fut.result(timeout)
+        except FuturesTimeoutError:
+            degraded = True
+            fut.cancel()
+            return fn(item)
+
+    try:
+        items_iter = iter(items)
+        while not degraded:
+            try:
+                item = next(items_iter)
+            except StopIteration:
+                break
+            pending.append((pool.submit(fn, item), item))
             if len(pending) >= 2 * workers:
-                yield pending.popleft().result()
+                yield _drain_one()
         while pending:
-            yield pending.popleft().result()
+            yield _drain_one()
+        for item in items_iter:  # non-empty only in degraded mode
+            yield fn(item)
+    finally:
+        pool.shutdown(wait=not degraded, cancel_futures=degraded)
 
 
 # ---------------------------------------------------------------------------
@@ -353,6 +397,7 @@ class ChunkedCompressor:
         conf: Optional[CompressionConfig] = None,
         workers: int = 1,
         speed_tier: str = "ratio",
+        chunk_timeout: Optional[float] = None,
     ):
         if speed_tier not in ("ratio", "throughput"):
             raise ValueError(f"unknown speed_tier {speed_tier!r}")
@@ -367,6 +412,10 @@ class ChunkedCompressor:
         self.conf = conf or CompressionConfig()
         self.workers = max(1, int(workers))
         self.speed_tier = speed_tier
+        #: seconds each parallel chunk task may take before the engine
+        #: degrades to serial compression in the calling thread (None: wait
+        #: forever — the pre-timeout behaviour)
+        self.chunk_timeout = chunk_timeout
 
     # -- shared per-chunk path ----------------------------------------------
     def _pwr_candidates(self) -> Tuple[str, ...]:
@@ -452,6 +501,7 @@ class ChunkedCompressor:
             lambda chunk: self._compress_chunk(chunk, abs_eb, eff),
             chunks,
             self.workers,
+            timeout=self.chunk_timeout,
         )
 
     # -- one-shot v2 container ----------------------------------------------
@@ -516,7 +566,13 @@ def _assemble_v2(
         header["eb_rel"] = float(conf.eb_rel)
     if header_extra:
         header.update(pl_mod._clean_meta(header_extra))
-    return pack_container(header, b"".join(body_parts))
+    # per-chunk checksums in the trailer mirror the header chunk table, so
+    # verification can name the damaged chunk and salvage can skip only it
+    return pack_container(
+        header,
+        b"".join(body_parts),
+        chunk_bounds=[(r.off, r.length) for r in records],
+    )
 
 
 #: default worker count for v2-container decompression via the generic
@@ -526,26 +582,34 @@ DECOMPRESS_WORKERS = 1
 
 
 def decompress_chunked(
-    blob: bytes, header: Dict[str, Any], body_off: int, workers: Optional[int] = None
+    blob: bytes,
+    header: Dict[str, Any],
+    body_off: int,
+    workers: Optional[int] = None,
+    verify: str = "strict",
 ) -> np.ndarray:
     """Decode a v2 multi-chunk container (called from pipeline.decompress).
 
     Chunks are independent blobs, so they decode on ``workers`` threads
     (default: module-level ``DECOMPRESS_WORKERS``); output ordering is
-    positional and unaffected by completion order.
+    positional and unaffected by completion order.  The chunk table is
+    validated against the real body size before any slice (hostile offsets
+    or lengths cannot direct reads outside the body), and ``verify``
+    propagates to the nested per-chunk decode.
     """
     workers = DECOMPRESS_WORKERS if workers is None else max(1, int(workers))
+    body = pl_mod.container_body(blob, body_off)
+    bounds = integrity.chunk_bounds_of(header, len(body))
+    nested = "off" if verify == "off" else "strict"
     parts = list(
         _parallel_map_ordered(
-            lambda c: pl_mod.decompress(
-                blob[body_off + c["off"] : body_off + c["off"] + c["len"]]
-            ),
-            header["chunks"],
+            lambda b: pl_mod.decompress(body[b[0] : b[0] + b[1]], verify=nested),
+            bounds,
             workers,
         )
     )
-    shape = tuple(header["shape"])
     dtype = np.dtype(header["dtype"])
+    shape = guard_shape(header["shape"], dtype.itemsize, "shape")
     if not parts:
         return np.zeros(shape, dtype)
     if parts[0].ndim == 0 or not shape:
@@ -554,15 +618,94 @@ def decompress_chunked(
     return np.concatenate(parts, axis=0).astype(dtype).reshape(shape)
 
 
-def decompress_chunk(blob: bytes, index: int) -> np.ndarray:
-    """Random access: decode only chunk ``index`` of a v2/v4 container."""
-    header, body_off = pl_mod.parse_header(blob)
-    if header.get("v", 1) < _VERSION2 or header.get("kind") not in ("chunked", "pwr"):
-        raise ValueError("not a chunked (v2) or pwr (v4) container")
-    c = header["chunks"][index]
-    return pl_mod.decompress(
-        blob[body_off + c["off"] : body_off + c["off"] + c["len"]]
+def salvage_chunked(
+    blob: bytes,
+    header: Dict[str, Any],
+    body_off: int,
+    workers: Optional[int] = None,
+    inspect_result: Optional[integrity.VerifyResult] = None,
+) -> Tuple[np.ndarray, SalvageReport]:
+    """``verify="salvage"`` for v2/v4 containers: decode every intact chunk
+    byte-exact, zero-fill the damaged ones, and report both sets.
+
+    A chunk is damaged when the trailer's per-chunk checksum says so (reason
+    ``"checksum"`` — its decode is not even attempted) or, absent a usable
+    trailer, when its nested decode raises a ``ValueError`` (reason
+    ``"decode-error"``).  The header itself must be intact — shape, dtype and
+    the chunk table are the map the salvage is drawn on — which the caller
+    (``pipeline._decompress_salvage``) has already enforced.
+    """
+    res = inspect_result
+    if res is None:
+        res = integrity.inspect(blob, header, body_off)
+    workers = DECOMPRESS_WORKERS if workers is None else max(1, int(workers))
+    body = pl_mod.container_body(blob, body_off)
+    with decode_errors("chunked container"):
+        dtype = np.dtype(header["dtype"])
+        shape = guard_shape(header["shape"], dtype.itemsize, "shape")
+        bounds = integrity.chunk_bounds_of(header, len(body))
+        lead = int(shape[0]) if shape else 1
+        inner = tuple(shape[1:])
+        n0s: List[int] = []
+        budget = lead
+        for i, c in enumerate(header["chunks"] if bounds else []):
+            n0 = guard_count(
+                c.get("n0") if isinstance(c, dict) else None,
+                budget,
+                f"chunk {i} n0",
+            )
+            n0s.append(n0)
+            budget -= n0
+    row = int(np.prod(inner, dtype=np.int64)) if inner else 1
+    bad = set(res.bad_chunks or []) if res.has_trailer else set()
+    report = SalvageReport(
+        total_chunks=len(bounds), checksummed=res.has_trailer
     )
+
+    def _decode_one(args):
+        i, (off, ln) = args
+        if i in bad:
+            return None, "checksum"
+        try:
+            with decode_errors(f"chunk {i}"):
+                part = pl_mod.decompress(body[off : off + ln], verify="strict")
+            return np.asarray(part), None
+        except ValueError:
+            return None, "decode-error"
+
+    results = list(
+        _parallel_map_ordered(_decode_one, enumerate(bounds), workers)
+    )
+    out = np.zeros((lead,) + inner, dtype)
+    r0 = 0
+    for i, ((part, reason), n0) in enumerate(zip(results, n0s)):
+        if part is not None and reason is None:
+            try:
+                out[r0 : r0 + n0] = part.astype(dtype).reshape((n0,) + inner)
+                report.recovered.append(i)
+            except ValueError:
+                reason = "decode-error"
+        if reason is not None:
+            report.damage.append(
+                ChunkDamage(i, r0 * row, (r0 + n0) * row, reason)
+            )
+        r0 += n0
+    return out.reshape(shape), report
+
+
+def decompress_chunk(blob: bytes, index: int, verify: str = "strict") -> np.ndarray:
+    """Random access: decode only chunk ``index`` of a v2/v4 container."""
+    with decode_errors("chunked container"):
+        header, body_off = pl_mod.parse_header(blob)
+        if header.get("v", 1) < _VERSION2 or header.get("kind") not in (
+            "chunked",
+            "pwr",
+        ):
+            raise ContainerError("not a chunked (v2) or pwr (v4) container")
+        body = pl_mod.container_body(blob, body_off)
+        bounds = integrity.chunk_bounds_of(header, len(body))
+        off, ln = bounds[index]  # IndexError -> ContainerError via decode_errors
+        return pl_mod.decompress(body[off : off + ln], verify=verify)
 
 
 # ---------------------------------------------------------------------------
@@ -601,16 +744,23 @@ def compress_stream(
 
 
 def decompress_stream(
-    frames: Iterable[bytes], workers: int = 1
+    frames: Iterable[bytes], workers: int = 1, verify: str = "strict"
 ) -> Iterator[np.ndarray]:
     """Inverse of :func:`compress_stream`: yield one decoded array per chunk.
 
     Tolerates a missing prologue (a bare sequence of v1/v2 blobs works too);
     memory stays bounded by one chunk (times the in-flight window when
     ``workers`` > 1 decodes frames on a thread pool; order is preserved).
+    ``verify`` is applied per frame; ``"salvage"`` yields
+    ``(data, SalvageReport)`` pairs instead of bare arrays, so a damaged
+    frame zero-fills and reports rather than killing the stream.
     """
     payload = (f for f in frames if f[:4] != _STREAM_MAGIC)
-    yield from _parallel_map_ordered(pl_mod.decompress, payload, max(1, int(workers)))
+    yield from _parallel_map_ordered(
+        lambda f: pl_mod.decompress(f, verify=verify),
+        payload,
+        max(1, int(workers)),
+    )
 
 
 def frames_to_blob(frames: Iterable[bytes]) -> bytes:
@@ -697,15 +847,19 @@ def write_frames(frames: Iterable[bytes], fp) -> int:
 
 
 def read_frames(fp) -> Iterator[bytes]:
-    """Inverse of :func:`write_frames`."""
+    """Inverse of :func:`write_frames`.  Hostile length prefixes are rejected
+    before the read: a negative count would make ``fp.read`` slurp the whole
+    stream, an absurd one would declare an unbounded allocation."""
     while True:
         head = fp.read(8)
         if len(head) < 8:
             return
-        (n,) = np.frombuffer(head, np.int64)
-        frame = fp.read(int(n))
-        if len(frame) != int(n):
-            raise ValueError("truncated frame stream")
+        n = int(np.frombuffer(head, np.int64)[0])
+        if n < 0 or n > integrity.MAX_OUTPUT_BYTES:
+            raise ContainerError(f"corrupt frame stream: frame length {n}")
+        frame = fp.read(n)
+        if len(frame) != n:
+            raise ContainerError("truncated frame stream")
         yield frame
 
 

@@ -61,7 +61,8 @@ from . import pipeline as pl_mod
 from . import preprocess as pre_mod
 from . import transform as tr_mod
 from .config import CompressionConfig, ErrorBoundMode
-from .pipeline import CompressionResult, pack_container
+from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
+from .pipeline import CompressionResult, container_body, pack_container
 
 _VERSION6 = 6
 
@@ -428,10 +429,23 @@ class FastModeCompressor:
         blob: bytes, header: Dict[str, Any], body_off: int
     ) -> np.ndarray:
         spec = header["spec"]
-        bs = int(spec["bs"])
         pdtype = np.dtype(header["pdtype"])
+        bs = guard_count(spec["bs"], 1 << 20, "fast block size")
+        if bs < 1:
+            raise ContainerError("corrupt fast container: block size < 1")
         fm = header["fast_meta"]
-        n, nb = int(fm["n"]), int(fm["nb"])
+        # header claims are internally over-determined — recompute the
+        # derivable ones and reject any inconsistency before allocating
+        n = int(fm["n"])
+        if n < 0:
+            raise ContainerError("corrupt fast container: negative n")
+        guard_alloc(n * pdtype.itemsize, "fast element count")
+        nb = int(fm["nb"])
+        if nb != (n + bs - 1) // bs:
+            raise ContainerError(
+                f"corrupt fast container: nb={nb} inconsistent with "
+                f"n={n}, bs={bs}"
+            )
         conf = CompressionConfig(
             mode=ErrorBoundMode(header["mode"]),
             eb=header["eb"],
@@ -440,10 +454,31 @@ class FastModeCompressor:
         if n == 0:
             flat = np.zeros(0, pdtype)
         else:
-            body = ll_mod.make(spec["lossless"]).decompress(blob[body_off:])
-            pos = 0
             const_len, means_len = int(fm["const_len"]), int(fm["means_len"])
             w_len = int(fm["w_len"])
+            n_const = guard_count(fm["n_const"], nb, "n_const")
+            n_nc = nb - n_const
+            if const_len != (nb + 7) // 8 or means_len != nb * pdtype.itemsize:
+                raise ContainerError(
+                    "corrupt fast container: const/means channel lengths "
+                    "inconsistent with block count"
+                )
+            if w_len != n_nc:
+                raise ContainerError(
+                    "corrupt fast container: width channel length "
+                    f"{w_len} != nonconstant block count {n_nc}"
+                )
+            planes_len = guard_alloc(fm["planes_len"], "planes_len")
+            total = const_len + means_len + w_len + planes_len
+            body = ll_mod.make(spec["lossless"]).decompress_bounded(
+                container_body(blob, body_off), guard_alloc(total, "fast body")
+            )
+            if len(body) != total:
+                raise ContainerError(
+                    f"fast body decompressed to {len(body)} bytes; header "
+                    f"declares {total}"
+                )
+            pos = 0
             const = np.unpackbits(
                 np.frombuffer(body, np.uint8, count=const_len), count=nb
             ).astype(bool)
@@ -453,7 +488,7 @@ class FastModeCompressor:
             w = np.frombuffer(body, np.uint8, count=w_len, offset=pos)
             pos += w_len
             abs_eb = float(header["abs_eb"])
-            n_nc = nb - int(fm["n_const"])
+            guard_alloc(n_nc * bs * 8, "fast residual grid")
             q = np.zeros((n_nc, bs), np.int64)
             for width in np.unique(w):
                 width = int(width)
@@ -477,14 +512,29 @@ class FastModeCompressor:
             flat = out.reshape(-1)[:n]
             if fm.get("nfail"):
                 idx = np.frombuffer(fm["fail_idx"], np.int64)
-                flat[idx] = np.frombuffer(fm["fail_vals"], pdtype)
-        pdata = flat.reshape(tuple(header["pshape"]))
+                # explicit bounds check: a negative corrupt index would
+                # silently wrap via numpy fancy indexing, an out-of-range one
+                # would raise a raw IndexError — both must be ContainerError
+                if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= n):
+                    raise ContainerError(
+                        "corrupt fast container: fail-channel index outside "
+                        f"[0, {n})"
+                    )
+                vals = np.frombuffer(fm["fail_vals"], pdtype)
+                if vals.size != idx.size:
+                    raise ContainerError(
+                        "corrupt fast container: fail-channel index/value "
+                        "counts differ"
+                    )
+                flat[idx] = vals
+        dtype = np.dtype(header["dtype"])
+        shape = guard_shape(header["shape"], dtype.itemsize, "shape")
+        pshape = guard_shape(header["pshape"], pdtype.itemsize, "pshape")
+        pdata = flat.reshape(pshape)
         data = pre_mod.make(spec["preprocessor"]).inverse(
             pdata, conf, header["pre_meta"]
         )
-        return data.astype(np.dtype(header["dtype"])).reshape(
-            tuple(header["shape"])
-        )
+        return data.astype(dtype).reshape(shape)
 
 
 def _pad_blocks_1d(x: np.ndarray, bs: int) -> Tuple[np.ndarray, int]:

@@ -13,6 +13,8 @@ import warnings
 import zlib
 from typing import Dict, Type
 
+from .integrity import ContainerError
+
 try:
     import zstandard as _zstd
 
@@ -37,6 +39,37 @@ def _warn_no_zstd() -> None:
         _warned_no_zstd = True
 
 
+def _bomb(limit: int, name: str) -> ContainerError:
+    return ContainerError(
+        f"decompression bomb: {name} stream inflates past the "
+        f"header-declared {limit} bytes"
+    )
+
+
+def _zlib_bounded(data: bytes, max_out: int) -> bytes:
+    """zlib-decompress at most ``max_out`` bytes; never allocates more than
+    ``max_out + 1`` regardless of what the stream claims to inflate to."""
+    d = zlib.decompressobj()
+    out = d.decompress(data, max_out + 1)
+    if len(out) > max_out:
+        raise _bomb(max_out, "zlib")
+    # returned < max_length => zlib consumed all input; out is complete
+    return out + d.flush()
+
+
+def _lzma_bounded(data: bytes, max_out: int) -> bytes:
+    d = lzma.LZMADecompressor()
+    out = d.decompress(data, max_out + 1)
+    while len(out) <= max_out and not d.eof and not d.needs_input:
+        more = d.decompress(b"", max_out + 1 - len(out))
+        if not more:
+            break
+        out += more
+    if len(out) > max_out:
+        raise _bomb(max_out, "lzma")
+    return out
+
+
 class LosslessBackend(abc.ABC):
     """Paper Appendix A.5: compress(bytes)->bytes / decompress(bytes)->bytes."""
 
@@ -47,6 +80,19 @@ class LosslessBackend(abc.ABC):
 
     @abc.abstractmethod
     def decompress(self, data: bytes) -> bytes: ...
+
+    def decompress_bounded(self, data: bytes, max_out: int) -> bytes:
+        """Decompress with a hard output ceiling: raise
+        :class:`~repro.core.integrity.ContainerError` instead of allocating
+        more than ``max_out`` bytes when a (corrupt or hostile) stream
+        inflates past the size its container header declared.  Backends
+        override this with a streaming-bounded path; the fallback decompresses
+        eagerly and only then checks — safe for trusted in-memory use, not a
+        bomb guard."""
+        out = self.decompress(data)
+        if len(out) > max_out:
+            raise _bomb(max_out, self.name)
+        return out
 
 
 class Passthrough(LosslessBackend):
@@ -95,6 +141,16 @@ class Zstd(LosslessBackend):
                 ) from e
         return self._d.decompress(data)
 
+    def decompress_bounded(self, data: bytes, max_out: int) -> bytes:
+        if self._d is None:
+            return _zlib_bounded(data, max_out)
+        try:
+            return self._d.decompress(data, max_output_size=max_out)
+        except _zstd.ZstdError as e:
+            if "output" in str(e).lower():
+                raise _bomb(max_out, "zstd") from e
+            raise
+
 
 class Gzip(LosslessBackend):
     name = "gzip"
@@ -108,6 +164,9 @@ class Gzip(LosslessBackend):
     def decompress(self, data: bytes) -> bytes:
         return zlib.decompress(data)
 
+    def decompress_bounded(self, data: bytes, max_out: int) -> bytes:
+        return _zlib_bounded(data, max_out)
+
 
 class Lzma(LosslessBackend):
     name = "lzma"
@@ -120,6 +179,9 @@ class Lzma(LosslessBackend):
 
     def decompress(self, data: bytes) -> bytes:
         return lzma.decompress(data)
+
+    def decompress_bounded(self, data: bytes, max_out: int) -> bytes:
+        return _lzma_bounded(data, max_out)
 
 
 _REGISTRY: Dict[str, Type[LosslessBackend]] = {

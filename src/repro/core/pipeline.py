@@ -38,14 +38,27 @@ import msgpack
 import numpy as np
 
 from . import encoders as enc_mod
+from . import integrity
 from . import lossless as ll_mod
 from . import predictors as pred_mod
 from . import preprocess as pre_mod
 from . import quantizers as quant_mod
 from .config import CompressionConfig, ErrorBoundMode
+from .integrity import (
+    ContainerError,
+    IntegrityError,
+    SalvageReport,
+    decode_errors,
+    guard_alloc,
+    guard_count,
+    guard_shape,
+)
 
 _MAGIC = b"SZ3J"
 _VERSION = 1
+
+#: accepted values for the ``verify=`` policy on the decode entry points
+VERIFY_MODES = ("strict", "salvage", "off")
 
 
 def _finite_stats(data: np.ndarray) -> Tuple[float, float]:
@@ -78,18 +91,40 @@ def _clean_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
-def pack_container(header: Dict[str, Any], body: bytes) -> bytes:
+def pack_container(
+    header: Dict[str, Any],
+    body: bytes,
+    chunk_bounds: Optional[Any] = None,
+) -> bytes:
     """The container wire format: magic + int64 (header, body) lengths +
-    msgpack header + body.  Single authority — every writer (v1 pipelines,
-    truncation, v2 chunked) must frame through here so readers stay
-    compatible."""
+    msgpack header + body + integrity trailer.  Single authority — every
+    writer (v1 pipelines, truncation, v2 chunked, transform, hybrid, fast)
+    must frame through here so readers stay compatible.
+
+    The trailer (see :mod:`.integrity`) sits BEYOND the declared body length,
+    so readers that honour the declared lengths skip it: old readers decode
+    new blobs, and pre-trailer blobs keep decoding here.  ``chunk_bounds``
+    lists body-relative ``(off, len)`` of independently decodable chunks for
+    per-chunk checksums (multi-chunk writers pass their chunk table); None
+    checksums the whole body as one chunk.  The header gains an ``itg`` flag
+    under the header checksum so strict verification can detect a stripped
+    trailer.  ``integrity.trailers_disabled()`` suppresses both (overhead
+    benchmarking, legacy-fixture generation)."""
+    if integrity.WRITE_TRAILERS:
+        header = dict(header)
+        header["itg"] = 1
     hbytes = msgpack.packb(header, use_bin_type=True)
-    return (
-        _MAGIC
-        + np.asarray([len(hbytes), len(body)], np.int64).tobytes()
-        + hbytes
-        + body
-    )
+    head = _MAGIC + np.asarray([len(hbytes), len(body)], np.int64).tobytes() + hbytes
+    if not integrity.WRITE_TRAILERS:
+        return head + body
+    return head + body + integrity.build_trailer(head, body, chunk_bounds)
+
+
+def container_body(blob: bytes, body_off: int) -> bytes:
+    """The body slice DECLARED by the prologue — never the raw tail, which
+    may carry the integrity trailer (or attacker-appended bytes)."""
+    blen = int.from_bytes(blob[12:20], "little", signed=True)
+    return blob[body_off : body_off + blen]
 
 
 @dataclasses.dataclass
@@ -197,30 +232,35 @@ class SZ3Compressor:
 
 def parse_header(blob: bytes) -> Tuple[Dict[str, Any], int]:
     """Parse the container prologue; rejects truncated/corrupt blobs with
-    ``ValueError`` instead of surfacing numpy index errors from the body."""
+    :class:`~repro.core.integrity.ContainerError` (a ``ValueError``) instead
+    of surfacing numpy index errors from the body.  Every length field is
+    bounded by the actual buffer BEFORE any slice or allocation, so a hostile
+    prologue cannot direct reads outside the blob or declare absurd sizes."""
     if len(blob) < 20:
-        raise ValueError(
+        raise ContainerError(
             f"truncated SZ3J container: {len(blob)} bytes, need at least 20"
         )
     if blob[:4] != _MAGIC:
-        raise ValueError("not an SZ3J container")
+        raise ContainerError("not an SZ3J container")
     lens = np.frombuffer(blob, np.int64, count=2, offset=4)
     hlen, blen = int(lens[0]), int(lens[1])
     if hlen < 0 or blen < 0 or 20 + hlen + blen > len(blob):
-        raise ValueError(
+        raise ContainerError(
             f"corrupt SZ3J container: header={hlen} body={blen} bytes do not "
             f"fit the {len(blob)}-byte buffer"
         )
     try:
         header = msgpack.unpackb(blob[20 : 20 + hlen], raw=False)
     except Exception as e:
-        raise ValueError(f"corrupt SZ3J container header: {e}") from e
+        raise ContainerError(f"corrupt SZ3J container header: {e}") from e
     if not isinstance(header, dict):
-        raise ValueError("corrupt SZ3J container header: not a map")
+        raise ContainerError("corrupt SZ3J container header: not a map")
     return header, 20 + hlen
 
 
-def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
+def decompress(
+    blob: bytes, workers: Optional[int] = None, verify: str = "strict"
+):
     """Self-describing decompression — rebuilds the pipeline from the header.
 
     Handles every container generation: v1 single-pipeline blobs, v2
@@ -233,35 +273,102 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     fastmode.py).
     ``workers`` parallelizes multi-chunk decode (ignored for
     single-pipeline blobs).
+
+    ``verify`` is the integrity policy (see :mod:`.integrity`):
+
+    * ``"strict"`` (default) — verify the trailer's checksums before decode;
+      raise :class:`IntegrityError` naming the first damaged chunk.  Blobs
+      written before the trailer era carry no checksums and pass unverified.
+    * ``"salvage"`` — decode every intact chunk, fill damaged ones with
+      zeros, and return ``(data, SalvageReport)`` instead of the bare array.
+    * ``"off"`` — skip checksum verification (malformed-structure errors
+      still raise).
+
+    Every malformed-input failure raises a ``ValueError`` subclass
+    (:class:`ContainerError` / :class:`IntegrityError`) — never a raw
+    ``struct.error`` / ``KeyError`` / ``IndexError`` from the internals.
     """
-    header, body_off = parse_header(blob)
+    if verify not in VERIFY_MODES:
+        raise ValueError(f"verify must be one of {VERIFY_MODES}, got {verify!r}")
+    blob = bytes(blob)
+    with decode_errors("container"):
+        header, body_off = parse_header(blob)
+        if verify == "salvage":
+            return _decompress_salvage(blob, header, body_off, workers)
+        if verify == "strict":
+            integrity.verify_container(blob, header, body_off)
+        return _decompress_dispatch(blob, header, body_off, workers, verify)
+
+
+def _decompress_dispatch(
+    blob: bytes,
+    header: Dict[str, Any],
+    body_off: int,
+    workers: Optional[int],
+    verify: str,
+) -> np.ndarray:
+    """Route a parsed container to its generation's decoder (checksum policy
+    already applied by the caller; ``verify`` propagates to nested chunk
+    blobs so a chunked decode verifies — or skips — uniformly)."""
     if header.get("v", _VERSION) >= 2 and header.get("kind") in ("chunked", "pwr"):
         from .chunking import decompress_chunked  # local: avoids import cycle
 
-        return decompress_chunked(blob, header, body_off, workers=workers)
+        return decompress_chunked(
+            blob, header, body_off, workers=workers, verify=verify
+        )
     spec = header["spec"]
-    if spec["kind"] == "truncation":
+    if not isinstance(spec, dict):
+        raise ContainerError("corrupt container: spec is not a map")
+    kind = spec.get("kind")
+    if kind == "truncation":
         return TruncationCompressor._decompress_body(blob, header, body_off)
-    if spec["kind"] == "transform":  # v3 blockwise-transform containers
+    if kind == "transform":  # v3 blockwise-transform containers
         from .transform import TransformCompressor  # local: avoids import cycle
 
         return TransformCompressor._decompress_body(blob, header, body_off)
-    if spec["kind"] == "hybrid":  # v5 block-level multi-predictor containers
+    if kind == "hybrid":  # v5 block-level multi-predictor containers
         from .blockwise import BlockHybridCompressor  # local: avoids import cycle
 
         return BlockHybridCompressor._decompress_body(blob, header, body_off)
-    if spec["kind"] == "fast":  # v6 SZx-style fixed-length containers
+    if kind == "fast":  # v6 SZx-style fixed-length containers
         from .fastmode import FastModeCompressor  # local: avoids import cycle
 
         return FastModeCompressor._decompress_body(blob, header, body_off)
+    return _decompress_v1(blob, header, body_off)
+
+
+def _decompress_v1(
+    blob: bytes, header: Dict[str, Any], body_off: int
+) -> np.ndarray:
+    """The v1 single-pipeline decode path, with every header-declared size
+    bounded before allocation (hostile length fields cannot trigger
+    decompression bombs or absurd numpy allocations)."""
+    spec = header["spec"]
     comp = SZ3Compressor.from_spec(spec)
-    body = comp.lossless.decompress(blob[body_off:])
-    enc_bytes = body[: header["enc_len"]]
-    q_bytes = body[header["enc_len"] : header["enc_len"] + header["q_len"]]
+    dtype = np.dtype(header["dtype"])
     pdtype = np.dtype(header["pdtype"])
+    shape = guard_shape(header["shape"], dtype.itemsize, "shape")
+    pshape = guard_shape(header["pshape"], pdtype.itemsize, "pshape")
+    enc_len = guard_alloc(header["enc_len"], "enc_len")
+    q_len = guard_alloc(header["q_len"], "q_len")
+    plain_len = guard_alloc(enc_len + q_len, "enc_len+q_len")
+    body = comp.lossless.decompress_bounded(
+        container_body(blob, body_off), plain_len
+    )
+    if len(body) != plain_len:
+        raise ContainerError(
+            f"v1 body decompressed to {len(body)} bytes; header declares "
+            f"{plain_len} (enc_len={enc_len} + q_len={q_len})"
+        )
+    enc_bytes = body[:enc_len]
+    q_bytes = body[enc_len:]
+    n_elems = int(np.prod(pshape, dtype=np.int64)) if pshape else 1
+    n_codes = guard_count(
+        header["n_codes"], 2 * n_elems + 4096, "n_codes"
+    )
     comp.quantizer.begin(header["abs_eb"], pdtype)
     comp.quantizer.load(q_bytes)
-    codes = comp.encoder.decode(enc_bytes, header["n_codes"])
+    codes = comp.encoder.decode(enc_bytes, n_codes)
     conf = CompressionConfig(
         mode=ErrorBoundMode(header["mode"]),
         eb=header["eb"],
@@ -272,14 +379,60 @@ def decompress(blob: bytes, workers: Optional[int] = None) -> np.ndarray:
     )
     pdata = comp.predictor.decompress(
         np.asarray(codes),
-        tuple(header["pshape"]),
+        pshape,
         pdtype,
         comp.quantizer,
         conf,
         header["pred_meta"],
     )
     data = comp.preprocessor.inverse(pdata, conf, header["pre_meta"])
-    return data.astype(np.dtype(header["dtype"])).reshape(tuple(header["shape"]))
+    return data.astype(dtype).reshape(shape)
+
+
+def _decompress_salvage(
+    blob: bytes, header: Dict[str, Any], body_off: int, workers: Optional[int]
+):
+    """``verify="salvage"``: recover what the damage spares.
+
+    Multi-chunk containers (v2 "chunked" / v4 "pwr") localize loss to the
+    chunk level: every chunk whose checksum passes — or, without a trailer,
+    whose decode succeeds — is recovered byte-exact; damaged chunks are
+    zero-filled and named in the report.  Single-body generations
+    (v1/v3/v5/v6) are all-or-nothing: one entropy stream, so a failed decode
+    loses the whole array (zero-filled, one damage record).  A damaged
+    HEADER is not salvageable — shape/dtype/chunk table are untrustworthy —
+    and raises :class:`IntegrityError`.
+    """
+    res = integrity.inspect(blob, header, body_off)
+    if res.has_trailer and not res.header_ok:
+        raise IntegrityError(
+            "container header bytes fail their checksum — shape, dtype and "
+            "chunk table are untrustworthy, nothing can be salvaged",
+            region="header",
+        )
+    if header.get("v", _VERSION) >= 2 and header.get("kind") in ("chunked", "pwr"):
+        from .chunking import salvage_chunked  # local: avoids import cycle
+
+        return salvage_chunked(
+            blob, header, body_off, workers=workers, inspect_result=res
+        )
+    dtype = np.dtype(header["dtype"])
+    shape = guard_shape(header["shape"], dtype.itemsize, "shape")
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    report = SalvageReport(total_chunks=1, checksummed=res.has_trailer)
+    reason = None
+    if res.has_trailer and not res.whole_ok:
+        reason = "checksum"
+    else:
+        try:
+            with decode_errors("container"):
+                data = _decompress_dispatch(blob, header, body_off, workers, "off")
+            report.recovered.append(0)
+            return data, report
+        except ValueError:
+            reason = "decode-error"
+    report.damage.append(integrity.ChunkDamage(0, 0, n, reason))
+    return np.zeros(shape, dtype), report
 
 
 class TruncationCompressor:
@@ -314,11 +467,20 @@ class TruncationCompressor:
     @staticmethod
     def _decompress_body(blob, header, body_off):
         spec = header["spec"]
-        k = spec["k"]
         dt = np.dtype(header["dtype"])
-        shape = tuple(header["shape"])
-        n = int(np.prod(shape)) if shape else 1
-        kept = ll_mod.make(spec["lossless"]).decompress(blob[body_off:])
+        k = guard_count(spec["k"], dt.itemsize, "truncation keep_bytes")
+        if k < 1:
+            raise ContainerError("corrupt container: truncation keep_bytes < 1")
+        shape = guard_shape(header["shape"], dt.itemsize, "shape")
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        kept = ll_mod.make(spec["lossless"]).decompress_bounded(
+            container_body(blob, body_off), n * k
+        )
+        if len(kept) != n * k:
+            raise ContainerError(
+                f"truncation body holds {len(kept)} bytes; header declares "
+                f"{n}x{k}"
+            )
         raw = np.zeros((n, dt.itemsize), np.uint8)
         raw[:, :k] = np.frombuffer(kept, np.uint8).reshape(n, k)
         be = raw.reshape(-1).view(dt.newbyteorder(">"))

@@ -45,7 +45,8 @@ from . import lossless as ll_mod
 from . import pipeline as pl_mod
 from .chunking import DEFAULT_CANDIDATES, ChunkedCompressor
 from .config import CompressionConfig, ErrorBoundMode
-from .pipeline import CompressionResult, pack_container
+from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
+from .pipeline import CompressionResult, container_body, pack_container
 from .predictors import _int_code_bits, _pack_mask, _unpack_mask
 from .quantizers import bitplane_decode, bitplane_encode
 
@@ -309,6 +310,9 @@ class TransformCompressor:
             shape, xp.shape, data.dtype, conf, abs_eb, e, bands.shape[0],
             bands.shape[1], meta,
         )
+        # declared plaintext size: lets decode bound the lossless inflation
+        # (decompression-bomb guard); absent on pre-integrity v3 blobs
+        header["payload_len"] = len(payload)
         blob = pack_container(header, body)
         return CompressionResult(
             blob=blob,
@@ -341,13 +345,27 @@ class TransformCompressor:
     def _decompress_body(blob: bytes, header: Dict[str, Any], body_off: int) -> np.ndarray:
         spec = header["spec"]
         dtype = np.dtype(header["dtype"])
-        shape = tuple(header["shape"])
-        pshape = tuple(header["pshape"])
+        shape = guard_shape(header["shape"], dtype.itemsize, "shape")
+        pshape = guard_shape(header["pshape"], 8, "pshape")
         meta = header.get("meta") or {}
-        nbands, nblocks = int(header["nbands"]), int(header["nblocks"])
+        nbands = guard_count(header["nbands"], 1 << 20, "nbands")
+        nblocks = guard_count(header["nblocks"], 1 << 40, "nblocks")
+        guard_alloc(nbands * nblocks * 8, "band grid")
         if nblocks == 0:
             return np.zeros(shape, dtype)
-        payload = ll_mod.make(spec["lossless"]).decompress(blob[body_off:])
+        backend = ll_mod.make(spec["lossless"])
+        raw = container_body(blob, body_off)
+        payload_len = header.get("payload_len")
+        if payload_len is not None:
+            payload_len = guard_alloc(payload_len, "payload_len")
+            payload = backend.decompress_bounded(raw, payload_len)
+            if len(payload) != payload_len:
+                raise ContainerError(
+                    f"transform body decompressed to {len(payload)} bytes; "
+                    f"header declares {payload_len}"
+                )
+        else:  # pre-integrity v3 blob: no declared plaintext size
+            payload = backend.decompress(raw)
         bands = _decode_bands(payload, nbands, nblocks)
         k = _unblockify(bands, pshape)
         step = 2.0 ** int(header["step_exp"])

@@ -25,9 +25,10 @@ import json
 import os
 import shutil
 import threading
+import time
 import zlib
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -38,8 +39,10 @@ from ..core import (
     ErrorBoundMode,
     QualityCompressor,
     decompress as sz3_decompress,
+    integrity,
     sz3_lorenzo,
 )
+from ..core.integrity import IntegrityError, decode_errors
 from ..core.lossless import Zstd, make as make_lossless
 
 # leaves at/above this size go through the chunked engine (bounded working
@@ -251,7 +254,14 @@ class CheckpointManager:
             fname = hashlib.sha1(pstr.encode()).hexdigest()[:16] + ".bin"
             (tmp / fname).write_bytes(blob)
             meta["file"] = fname
-            meta["crc"] = zlib.crc32(blob)
+            meta["crc"] = zlib.crc32(blob)  # kept for pre-integrity readers
+            # algorithm-tagged per-leaf checksum (CRC32C when available) —
+            # the manifest-side twin of the container trailer, covering raw
+            # and lossless leaves that carry no SZ3J framing
+            meta["csum"] = {
+                "a": integrity.CHECKSUM_ALGO,
+                "v": integrity.checksum(blob),
+            }
             leaves[pstr] = meta
             total_in += arr.nbytes
             total_out += len(blob)
@@ -293,37 +303,152 @@ class CheckpointManager:
                 pass
         return sorted(out)
 
-    def restore(self, template, step: Optional[int] = None):
+    def restore(
+        self,
+        template,
+        step: Optional[int] = None,
+        *,
+        salvage: bool = False,
+        io_retries: int = 3,
+        io_backoff: float = 0.05,
+    ):
         """Restore into the structure of ``template`` (host numpy leaves).
 
         ``template`` supplies the pytree structure (e.g. from
-        jax.eval_shape(init_fn)); leaves are validated against the manifest.
-        Returns (state, extra)."""
+        jax.eval_shape(init_fn)); leaves are validated against the manifest
+        and their per-leaf checksums.  Returns ``(state, extra)``.
+
+        ``salvage=True`` turns a corrupt leaf from a restore-killing error
+        into a local loss: damaged / missing / shape-mismatched leaves are
+        REFILLED from the template's own values (zeros when the template
+        leaf is shape-only, e.g. ``jax.eval_shape`` output) and the call
+        returns ``(state, extra, RestoreReport)`` naming what was refilled —
+        the training loop decides whether a warm restart from N-1 leaves
+        beats losing the checkpoint entirely.
+
+        Transient I/O errors (``OSError`` other than a missing file) are
+        retried ``io_retries`` times with exponential backoff starting at
+        ``io_backoff`` seconds — NFS blips and overloaded object stores
+        should not look like corruption."""
         steps = self.list_steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         step = steps[-1] if step is None else step
         d = self.dir / f"step_{step}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        manifest = json.loads(
+            self._read_retry(d / "manifest.json", io_retries, io_backoff).decode()
+        )
         leaves = manifest["leaves"]
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         out = []
+        report = RestoreReport(step=int(step))
         for path, leaf in flat:
             pstr = _path_str(path)
-            if pstr not in leaves:
-                raise KeyError(f"leaf {pstr} missing from checkpoint {step}")
-            meta = leaves[pstr]
-            blob = (d / meta["file"]).read_bytes()
-            if zlib.crc32(blob) != meta["crc"]:
-                raise IOError(f"checksum mismatch for {pstr} — corrupt checkpoint")
-            arr = decode_leaf(blob, meta)
-            want_shape = tuple(getattr(leaf, "shape", arr.shape))
-            if tuple(arr.shape) != want_shape:
-                raise ValueError(
-                    f"{pstr}: checkpoint shape {arr.shape} != expected {want_shape}"
+            try:
+                arr = self._restore_leaf(
+                    d, leaves, pstr, step, leaf, io_retries, io_backoff
                 )
+            except FileNotFoundError:
+                if not salvage:
+                    raise
+                arr, reason = None, "missing"
+            except (KeyError, LookupError):
+                if not salvage:
+                    raise
+                arr, reason = None, "missing"
+            except (IntegrityError, IOError) as e:
+                if not salvage:
+                    raise
+                arr, reason = None, "checksum"
+            except ValueError:
+                if not salvage:
+                    raise
+                arr, reason = None, "decode-error"
+            if arr is None:
+                arr = _template_fill(leaf)
+                report.refilled.append((pstr, reason))
+            else:
+                report.restored.append(pstr)
             out.append(arr)
         state = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), out
         )
-        return state, manifest.get("extra", {})
+        extra = manifest.get("extra", {})
+        if salvage:
+            return state, extra, report
+        return state, extra
+
+    def _restore_leaf(
+        self, d: Path, leaves, pstr: str, step, leaf, io_retries, io_backoff
+    ) -> np.ndarray:
+        if pstr not in leaves:
+            raise KeyError(f"leaf {pstr} missing from checkpoint {step}")
+        meta = leaves[pstr]
+        blob = self._read_retry(d / meta["file"], io_retries, io_backoff)
+        csum = meta.get("csum")
+        if csum is not None:
+            if integrity.checksum(blob, algo=csum["a"]) != csum["v"]:
+                raise IntegrityError(
+                    f"leaf {pstr} fails its {csum['a']} checksum — corrupt "
+                    "checkpoint"
+                )
+        elif zlib.crc32(blob) != meta["crc"]:  # pre-integrity manifests
+            raise IOError(f"checksum mismatch for {pstr} — corrupt checkpoint")
+        with decode_errors(f"checkpoint leaf {pstr}"):
+            arr = decode_leaf(blob, meta)
+        want_shape = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{pstr}: checkpoint shape {arr.shape} != expected {want_shape}"
+            )
+        return arr
+
+    @staticmethod
+    def _read_retry(path: Path, retries: int, backoff: float) -> bytes:
+        """Read with bounded retry-with-backoff on transient I/O errors.
+        A missing file is NOT transient (the checkpoint layout is immutable
+        once renamed into place) and raises immediately."""
+        attempt = 0
+        while True:
+            try:
+                return path.read_bytes()
+            except FileNotFoundError:
+                raise
+            except OSError:
+                if attempt >= retries:
+                    raise
+                time.sleep(backoff * (2**attempt))
+                attempt += 1
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What a ``salvage=True`` restore recovered vs refilled."""
+
+    step: int
+    restored: List[str] = dataclasses.field(default_factory=list)
+    refilled: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.refilled
+
+    def summary(self) -> str:
+        if self.ok:
+            return f"restore step {self.step}: all {len(self.restored)} leaves"
+        lost = ", ".join(f"{p} ({r})" for p, r in self.refilled)
+        return (
+            f"restore step {self.step}: {len(self.restored)} leaves restored, "
+            f"{len(self.refilled)} refilled from template: {lost}"
+        )
+
+
+def _template_fill(leaf) -> np.ndarray:
+    """A replacement value for a leaf the checkpoint could not supply: the
+    template's own value when it carries one, zeros when it is shape-only
+    (``jax.eval_shape`` / ``ShapeDtypeStruct`` templates)."""
+    if hasattr(leaf, "__array__"):
+        return np.asarray(leaf)
+    return np.zeros(
+        tuple(getattr(leaf, "shape", ())), np.dtype(getattr(leaf, "dtype", "f4"))
+    )

@@ -52,6 +52,14 @@ def main():
         default=1,
         help="chunk-compression threads for the KV offload stream",
     )
+    ap.add_argument(
+        "--offload-verify",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="strict-decode every offloaded frame on read-back (checksum "
+        "trailers verified) before counting it evicted; --no-offload-verify "
+        "skips the read-back pass",
+    )
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -94,6 +102,7 @@ def main():
             workers=args.offload_workers,
             candidates=candidates,
             target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
+            verify=args.offload_verify,
         )
 
 
@@ -104,6 +113,7 @@ def offload_cache(
     workers: int = 1,
     candidates=None,
     target_psnr: float = None,
+    verify: bool = True,
 ):
     """Stream every float cache leaf through the chunked engine; report totals.
 
@@ -114,12 +124,19 @@ def offload_cache(
     closed-loop quality-targeted controller: instead of a hand-picked error
     bound, each chunk is compressed at whatever bound hits the PSNR floor,
     and the achieved PSNR is reported alongside the ratio.
+
+    ``verify=True`` strict-decodes every frame on read-back (checksum
+    trailers verified, ``repro.core.integrity``) before the bytes are counted
+    as safely evicted — the eviction path never trades a live KV page for a
+    silently corrupt one.  Verification time is reported separately so the
+    cost of the read-back pass is visible.
     """
     from repro.core import (
         AUTO_CANDIDATES,
         CompressionConfig,
         ErrorBoundMode,
         QualityCompressor,
+        decompress as sz3_decompress,
     )
     from repro.core.chunking import DEFAULT_CANDIDATES, compress_stream
 
@@ -138,8 +155,9 @@ def offload_cache(
         if target_psnr is not None
         else None
     )
-    n_in = n_out = n_leaves = 0
+    n_in = n_out = n_leaves = n_frames = 0
     worst_psnr = float("inf")
+    t_verify = 0.0
     t0 = time.perf_counter()
     for leaf in jax.tree.leaves(cache):
         dt = getattr(leaf, "dtype", None)
@@ -152,25 +170,40 @@ def offload_cache(
             res = quality.compress(arr)
             n_out += len(res.blob)
             worst_psnr = min(worst_psnr, res.meta["quality"]["achieved_psnr"])
+            if verify:
+                tv = time.perf_counter()
+                sz3_decompress(res.blob, verify="strict")
+                t_verify += time.perf_counter() - tv
+                n_frames += 1
         else:
             for frame in compress_stream(
                 arr, conf, candidates=candidates, chunk_bytes=chunk_bytes,
                 workers=workers,
             ):
                 n_out += len(frame)
+                # payload frames only: the stream prologue is not a container
+                if verify and frame[:4] == b"SZ3J":
+                    tv = time.perf_counter()
+                    sz3_decompress(frame, verify="strict")
+                    t_verify += time.perf_counter() - tv
+                    n_frames += 1
         n_in += arr.nbytes
         n_leaves += 1
     dt = time.perf_counter() - t0
+    vnote = (
+        f", verified {n_frames} frames in {t_verify:.2f}s" if verify else ""
+    )
     if quality is not None:
         print(
             f"kv offload (quality, target {target_psnr:g} dB): {n_leaves} leaves, "
             f"{n_in / max(1, n_out):.2f}x ratio, worst leaf {worst_psnr:.1f} dB, "
-            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
+            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s{vnote}"
         )
     else:
         print(
             f"kv offload (chunked stream, rel eb={eb:g}): {n_leaves} leaves, "
-            f"{n_in / max(1, n_out):.2f}x ratio, {n_in / 1e6 / max(dt, 1e-9):.1f} MB/s"
+            f"{n_in / max(1, n_out):.2f}x ratio, "
+            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s{vnote}"
         )
     return n_in, n_out
 

@@ -1,0 +1,189 @@
+"""(Re)generate the corrupted-blob negative fixtures.
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/data/faults/gen_faults.py
+
+One entry per container generation (v1-v6).  Each entry is a triple:
+
+  * ``<name>.sz3``          pristine blob WITH its integrity trailer
+  * ``<name>.npy``          the exact array the pristine blob decodes to
+  * ``<name>_corrupt.sz3``  the same blob with one deterministic fault
+
+plus a shared ``manifest.json`` recording, per entry, what was damaged and
+— for the chunked generations — which chunk indices salvage mode must
+recover vs lose.  ``tests/test_faults.py`` pins BOTH directions on these:
+strict decode of the corrupt blob raises a typed ``IntegrityError``, and
+salvage decode recovers exactly the recorded chunk set byte-for-byte.
+
+These live in a subdirectory (not ``tests/data/`` itself) because the
+conformance corpus globs ``tests/data/*.sz3`` and requires a matching
+golden ``.npy`` for every stem it finds.
+
+Like the conformance corpus: only ever ADD entries; regenerating committed
+ones silently rewrites the contract the fixtures exist to pin.
+"""
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3] / "src"))
+
+from repro.core import (  # noqa: E402
+    CompressionConfig,
+    ErrorBoundMode,
+    decompress,
+    faults,
+    parse_header,
+    sz3_chunked,
+    sz3_fast,
+    sz3_hybrid,
+    sz3_lorenzo,
+    sz3_pwr,
+    sz3_transform,
+)
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def smooth(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax) / np.sqrt(shape[ax])
+    return x.astype(dtype)
+
+
+def emit(manifest, name, blob, corrupt, note, **extra):
+    path = HERE / f"{name}.sz3"
+    if path.exists():
+        print(f"SKIP {name}: already committed")
+        return
+    decoded = decompress(blob, verify="strict")
+    path.write_bytes(blob)
+    np.save(HERE / f"{name}.npy", decoded)
+    (HERE / f"{name}_corrupt.sz3").write_bytes(corrupt)
+    manifest[name] = {"fault": note, **extra}
+    print(f"wrote {name}: {len(blob)}B pristine, fault = {note}")
+
+
+def main():
+    abs_conf = CompressionConfig(mode=ErrorBoundMode.ABS, eb=1e-3)
+    rel_conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+    pwr_conf = CompressionConfig(mode=ErrorBoundMode.PW_REL, eb=1e-3)
+    manifest = {}
+
+    # v1: single-body Lorenzo — bitflip mid-body (whole-digest catch)
+    blob = sz3_lorenzo().compress(smooth((40, 24), 21), abs_conf).blob
+    _, body_off = parse_header(blob)
+    pos = body_off + (len(blob) - body_off) // 3
+    emit(
+        manifest,
+        "v1_lorenzo",
+        blob,
+        faults.bit_flip(blob, pos, 5),
+        f"bitflip body byte {pos}",
+        generation="v1",
+    )
+
+    # v2: 4-chunk container — flip a byte inside chunk 1 only; salvage must
+    # recover chunks {0, 2, 3} byte-exact and report chunk 1 lost
+    z = smooth((48, 32), 22)
+    blob = sz3_chunked(chunk_bytes=2048).compress(z, rel_conf).blob
+    header, _ = parse_header(blob)
+    n_chunks = len(header["chunks"])
+    bad = 1
+    emit(
+        manifest,
+        "v2_chunked",
+        blob,
+        faults.corrupt_chunk(blob, bad),
+        f"bitflip inside chunk {bad} of {n_chunks}",
+        generation="v2",
+        n_chunks=n_chunks,
+        damaged_chunks=[bad],
+    )
+
+    # v3: transform coder — bitflip mid-body
+    osc = (
+        np.sin(0.9 * np.pi * np.arange(1536)) + 0.05 * smooth((1536,), 23)
+    ).astype(np.float32)
+    blob = sz3_transform().compress(osc, abs_conf).blob
+    _, body_off = parse_header(blob)
+    pos = body_off + (len(blob) - body_off) // 2
+    emit(
+        manifest,
+        "v3_transform",
+        blob,
+        faults.bit_flip(blob, pos, 1),
+        f"bitflip body byte {pos}",
+        generation="v3",
+    )
+
+    # v4: pointwise-relative chunked — damage the LAST chunk; salvage must
+    # recover every earlier chunk (log side channels intact per chunk)
+    w = np.exp(smooth((64, 24), seed=24, dtype=np.float64))
+    w[5, 5] = 0.0
+    w[::9, 3] *= -1
+    blob = sz3_pwr(eb=1e-3, chunk_bytes=4096).compress(w, pwr_conf).blob
+    header, _ = parse_header(blob)
+    n_chunks = len(header["chunks"])
+    bad = n_chunks - 1
+    emit(
+        manifest,
+        "v4_pwr",
+        blob,
+        faults.corrupt_chunk(blob, bad),
+        f"bitflip inside chunk {bad} of {n_chunks}",
+        generation="v4",
+        n_chunks=n_chunks,
+        damaged_chunks=[bad],
+    )
+
+    # v5: block-hybrid — bitflip in the tag/coefficient stream region
+    rng = np.random.default_rng(25)
+    m = np.cumsum(rng.standard_normal((64, 64)), axis=0).astype(np.float32)
+    m[16:32, 16:32] = 0.0
+    blob = sz3_hybrid().compress(m, abs_conf).blob
+    _, body_off = parse_header(blob)
+    pos = body_off + (len(blob) - body_off) * 2 // 3
+    emit(
+        manifest,
+        "v5_hybrid",
+        blob,
+        faults.bit_flip(blob, pos, 3),
+        f"bitflip body byte {pos}",
+        generation="v5",
+    )
+
+    # v6: fast tier — bitflip in the bit-plane section
+    rng = np.random.default_rng(26)
+    f = np.concatenate(
+        [np.full(512, 1.5), np.cumsum(rng.standard_normal(700))]
+    ).astype(np.float32)
+    blob = sz3_fast().compress(f, abs_conf).blob
+    _, body_off = parse_header(blob)
+    pos = body_off + (len(blob) - body_off) // 2
+    emit(
+        manifest,
+        "v6_fast",
+        blob,
+        faults.bit_flip(blob, pos, 7),
+        f"bitflip body byte {pos}",
+        generation="v6",
+    )
+
+    man_path = HERE / "manifest.json"
+    if manifest:
+        merged = {}
+        if man_path.exists():
+            merged = json.loads(man_path.read_text())
+        merged.update(manifest)
+        man_path.write_text(json.dumps(merged, indent=1, sort_keys=True) + "\n")
+        print(f"manifest: {sorted(merged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -123,7 +123,11 @@ def test_v2_header_records_chunk_table():
     assert chunks[0]["off"] == 0
     for a, b in zip(chunks, chunks[1:]):
         assert b["off"] == a["off"] + a["len"]
-    assert body_off + chunks[-1]["off"] + chunks[-1]["len"] == len(res.blob)
+    # chunks tile the DECLARED body exactly; the integrity trailer (if
+    # written) sits beyond it, so compare against blen rather than len(blob)
+    blen = int.from_bytes(res.blob[12:20], "little")
+    assert chunks[-1]["off"] + chunks[-1]["len"] == blen
+    assert body_off + blen <= len(res.blob)
     for c in chunks:
         assert c["pipeline"] in DEFAULT_CANDIDATES
 
