@@ -122,6 +122,32 @@ QUALITY_GATES = [
         "strict-verify decompress overhead < 5% (fast tier)",
         lambda v, perf: v < 5.0,
     ),
+    # telemetry spine (PR8): stage spans + decision records must be free
+    # when no trace is active (< 1%) and cheap when one is (< 5%), on both
+    # the chunked tier (many spans, one decision per chunk) and the fast
+    # tier.  Same isolated-added-work methodology as the integrity gates —
+    # per-event cost times the event count one compress emits, against the
+    # untraced compress timing — so the ratio is machine-independent.
+    (
+        ("telemetry", "chunked", "overhead_off_pct"),
+        "telemetry disabled-path overhead < 1% (chunked tier)",
+        lambda v, perf: v < 1.0,
+    ),
+    (
+        ("telemetry", "chunked", "overhead_on_pct"),
+        "telemetry traced-path overhead < 5% (chunked tier)",
+        lambda v, perf: v < 5.0,
+    ),
+    (
+        ("telemetry", "fast", "overhead_off_pct"),
+        "telemetry disabled-path overhead < 1% (fast tier)",
+        lambda v, perf: v < 1.0,
+    ),
+    (
+        ("telemetry", "fast", "overhead_on_pct"),
+        "telemetry traced-path overhead < 5% (fast tier)",
+        lambda v, perf: v < 5.0,
+    ),
 ]
 
 

@@ -4,6 +4,9 @@ The paper's five-module abstraction (preprocessor -> predictor -> quantizer ->
 encoder -> lossless) composed per §3.3, plus the customized pipelines of §4
 (GAMESS / SZ3-Pastri), §5 (APS adaptive) and §6.2 (LR / Interp / Truncation).
 """
+from . import telemetry  # noqa: I001  (stdlib-only; must import first so
+# every other core module can use it without cycles)
+from .telemetry import Trace, explain, trace_summary
 from . import encoders, lossless, metrics, predictors, preprocess, quantizers
 from . import faults, integrity
 from .config import CompressionConfig, ErrorBoundMode
@@ -73,6 +76,10 @@ from .quality import (  # noqa: I001  (quality must import after transform)
 )
 
 __all__ = [
+    "telemetry",
+    "Trace",
+    "explain",
+    "trace_summary",
     "CompressionConfig",
     "ErrorBoundMode",
     "ContainerError",

@@ -49,6 +49,7 @@ from . import pipeline as pl_mod
 from . import predictors as pred_mod
 from . import preprocess as pre_mod
 from . import quantizers as quant_mod
+from . import telemetry as tel
 from . import transform as tr_mod
 from .config import CompressionConfig, ErrorBoundMode
 from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
@@ -286,8 +287,10 @@ class BlockHybridCompressor:
         if abs_eb <= 0:
             abs_eb = float(np.finfo(np.float64).tiny)
         self.quantizer.begin(abs_eb, pdata.dtype)
-        codes, tag_bytes, hmeta = self._compress_blocks(pdata, conf2)
-        enc_bytes = self.encoder.encode(codes)
+        with tel.span("predict", bytes=pdata.nbytes):  # per-block contest
+            codes, tag_bytes, hmeta = self._compress_blocks(pdata, conf2)
+        with tel.span("huffman", bytes=codes.nbytes):
+            enc_bytes = self.encoder.encode(codes)
         q_bytes = self.quantizer.save()
         spec = self.spec()
         spec["preprocessor"] = pre.name  # the EFFECTIVE preprocessor (PW_REL
@@ -315,8 +318,23 @@ class BlockHybridCompressor:
             "pre_meta": pl_mod._clean_meta(pre_meta),
             "hyb_meta": pl_mod._clean_meta(hmeta),
         }
-        body = self.lossless.compress(enc_bytes + q_bytes + tag_bytes)
+        with tel.span("lossless", bytes=len(enc_bytes) + len(q_bytes) + len(tag_bytes)):
+            body = self.lossless.compress(enc_bytes + q_bytes + tag_bytes)
         blob = pack_container(header, body)
+        if tel.enabled():
+            counts = {TAG_NAMES[t]: int(hmeta["counts"][t]) for t in range(4)}
+            tel.record_decision(tel.make_decision(
+                "sz3_hybrid",
+                max(counts, key=counts.get),
+                scope="block-summary",
+                candidates=list(TAG_NAMES),
+                estimates={k: float(v) for k, v in counts.items()},
+                realized_bits=8.0 * len(blob) / max(1, data.size),
+                n_elems=int(data.size),
+                fallbacks=int(hmeta["nfail"]),
+                extra={"counts": counts, "n_reg": int(hmeta["n_reg"]),
+                       "nb": int(hmeta["nb"])},
+            ))
         meta = None
         if with_stats:
             meta = dict(hmeta)
@@ -349,7 +367,8 @@ class BlockHybridCompressor:
         eb = quantizer.eb
         # prequantize once for all integer-grid candidates; fail marks points
         # (non-finite / cast-rounding) the grid cannot represent in bound
-        qfull, _recon, fail = quantizer.prequantize(blocks)
+        with tel.span("quantize", bytes=blocks.nbytes):
+            qfull, _recon, fail = quantizer.prequantize(blocks)
         d1, d2, qres, coef_q, pred_reg, reg_bad = _candidate_codes(
             blocks, qfull, eb
         )

@@ -61,6 +61,7 @@ import numpy as np
 from . import integrity
 from . import pipeline as pl_mod
 from . import preprocess as pre_mod
+from . import telemetry as tel
 from .config import CompressionConfig, ErrorBoundMode
 from .integrity import (
     ChunkDamage,
@@ -119,6 +120,10 @@ def _parallel_map_ordered(
         for item in items:
             yield fn(item)
         return
+    # worker threads start with an empty contextvars context, so an active
+    # telemetry trace must be explicitly re-bound inside each task (no-op
+    # wrapper-free passthrough when tracing is off)
+    fn = tel.propagate(fn)
     # CPU-bound tasks: more threads than cores is pure contention, so the
     # pool is clamped (the in-flight window still honours ``workers``)
     pool_size = max(1, min(workers, os.cpu_count() or workers))
@@ -270,7 +275,8 @@ TRIVIAL_BITS = 0.05
 
 def _trial_bits(comp, sample: np.ndarray, eff: CompressionConfig) -> float:
     try:
-        return 8.0 * len(comp.compress(sample, eff).blob) / max(1, sample.size)
+        with tel.suppress_decisions():  # runoff trials are not real outputs
+            return 8.0 * len(comp.compress(sample, eff).blob) / max(1, sample.size)
     except Exception:
         return float("inf")
 
@@ -366,6 +372,10 @@ class ChunkRecord:
     pipeline: str  # winning candidate name (observability; blob self-describes)
     extra: Optional[Dict[str, Any]] = None  # e.g. the quality controller's
     # per-chunk achieved record; readers that predate it ignore the key
+    sel: Optional[Dict[str, Any]] = None  # compact selection-decision record
+    # (telemetry.sel_header_entry) — present only when a trace was active at
+    # compress time, so default-path containers stay byte-identical to the
+    # frame-stream reassembly; telemetry.explain() reads it back
 
     def to_header(self) -> Dict[str, Any]:
         h = {
@@ -376,6 +386,8 @@ class ChunkRecord:
         }
         if self.extra:
             h["q"] = pl_mod._clean_meta(self.extra)
+        if self.sel:
+            h["sel"] = pl_mod._clean_meta(self.sel)
         return h
 
 
@@ -437,7 +449,7 @@ class ChunkedCompressor:
 
     def _compress_chunk(
         self, chunk: np.ndarray, abs_eb: float, eff: CompressionConfig
-    ) -> Tuple[bytes, str, int]:
+    ) -> Tuple[bytes, str, int, Optional[Dict[str, Any]]]:
         """Select + compress ONE chunk.  Self-contained per call: pipeline
         instances hold quantizer state across their compress() internals, so
         each task builds its own (construction is a few object allocations —
@@ -450,31 +462,57 @@ class ChunkedCompressor:
         chunk against the log-domain ABS bound (exactly what the predictor
         will see), and the emitted v1 blob carries the chunk's sign / zero /
         non-finite side channels in its ``pre_meta`` — every chunk stays
-        independently decodable through the ordinary v1 path."""
+        independently decodable through the ordinary v1 path.
+
+        The 4th element is the selection-decision info (who contested, the
+        stage-1 scores, fail-channel count, device routing) — computed only
+        while a telemetry trace is active, None otherwise, so the traced-off
+        path does no extra work and emits byte-identical containers."""
         n0 = int(chunk.shape[0] if chunk.ndim else chunk.size)
         if eff.mode == ErrorBoundMode.PW_REL:
             cands = self._pwr_candidates()
             pipelines = {name: _make_pipeline(name) for name in cands}
             sel_conf = eff.replace(mode=ErrorBoundMode.ABS, eb=abs_eb)
-            name, _scores = select_pipeline(
-                pre_mod.log_domain_view(chunk), abs_eb, sel_conf, cands,
-                pipelines=pipelines, speed_tier=self.speed_tier,
-            )
+            with tel.span("select"):
+                name, scores = select_pipeline(
+                    pre_mod.log_domain_view(chunk), abs_eb, sel_conf, cands,
+                    pipelines=pipelines, speed_tier=self.speed_tier,
+                )
             comp = pipelines[name]
             comp.preprocessor = pre_mod.LogTransform()
-            return comp.compress(chunk, eff).blob, name, n0
-        pipelines = {name: _make_pipeline(name) for name in self.candidates}
-        name, _scores = select_pipeline(
-            chunk, abs_eb, eff, self.candidates, pipelines=pipelines,
-            speed_tier=self.speed_tier,
+        else:
+            cands = self.candidates
+            pipelines = {name: _make_pipeline(name) for name in cands}
+            with tel.span("select"):
+                name, scores = select_pipeline(
+                    chunk, abs_eb, eff, cands, pipelines=pipelines,
+                    speed_tier=self.speed_tier,
+                )
+            comp = pipelines[name]
+        if not tel.enabled():
+            return comp.compress(chunk, eff).blob, name, n0, None
+        with tel.suppress_decisions():  # one authoritative record per chunk,
+            # emitted chunk-ordered by _chunk_frames — a nested engine winner
+            # (hybrid/fast) must not race its own record in from this thread
+            res = comp.compress(chunk, eff, with_stats=True)
+        meta = res.meta or {}
+        sel = tel.sel_header_entry(
+            cands, scores, name,
+            nfail=int(meta.get("nfail", 0)),
+            device="device" if meta.get("device") else "host",
         )
-        blob = pipelines[name].compress(chunk, eff).blob
-        return blob, name, n0
+        sel["n"] = int(chunk.size)  # trace-only; stripped before the header
+        return res.blob, name, n0, sel
 
     def _chunk_frames(
         self, data: np.ndarray, conf: CompressionConfig
-    ) -> Iterator[Tuple[bytes, str, int]]:
-        """Yield (v1 blob, pipeline name, axis-0 extent) per chunk."""
+    ) -> Iterator[Tuple[bytes, str, int, Optional[Dict[str, Any]]]]:
+        """Yield (v1 blob, pipeline name, axis-0 extent, selection info) per
+        chunk.  Under an active trace, each chunk's work runs inside a
+        ``chunk`` span tagged ``order=i`` (exporters sort siblings by it, so
+        parallel traces merge deterministically) and a schema-pinned
+        selection-decision record is emitted in chunk order from the ordered
+        consumer side — never from racing worker threads."""
         data = np.asarray(data)
         if data.dtype not in (np.float32, np.float64):
             data = data.astype(np.float32)
@@ -497,12 +535,32 @@ class ChunkedCompressor:
                 flat_leading.shape, flat_leading.dtype.itemsize, self.chunk_bytes
             )
         )
-        yield from _parallel_map_ordered(
-            lambda chunk: self._compress_chunk(chunk, abs_eb, eff),
-            chunks,
-            self.workers,
-            timeout=self.chunk_timeout,
+
+        def _one(args: Tuple[int, np.ndarray]):
+            i, chunk = args
+            with tel.span("chunk", order=i, bytes=chunk.nbytes):
+                return self._compress_chunk(chunk, abs_eb, eff)
+
+        engine = tel.chunked_engine_name(self.kind, self.candidates)
+        results = _parallel_map_ordered(
+            _one, enumerate(chunks), self.workers, timeout=self.chunk_timeout
         )
+        for i, (blob, name, n0, sel) in enumerate(results):
+            if sel is not None:
+                tel.record_decision(tel.make_decision(
+                    engine,
+                    name,
+                    index=i,
+                    candidates=sel["cands"],
+                    estimates=sel.get("est") or None,
+                    est_bits=sel.get("est_bits"),
+                    realized_bits=8.0 * len(blob) / max(1, sel["n"]),
+                    margin=sel.get("margin"),
+                    n_elems=sel["n"],
+                    fallbacks=sel["nfail"],
+                    device=sel["dev"],
+                ))
+            yield blob, name, n0, sel
 
     # -- one-shot v2 container ----------------------------------------------
     def compress(
@@ -519,8 +577,11 @@ class ChunkedCompressor:
         records: List[ChunkRecord] = []
         body_parts: List[bytes] = []
         off = 0
-        for blob, name, n0 in self._chunk_frames(data, conf):
-            records.append(ChunkRecord(off, len(blob), n0, name))
+        for blob, name, n0, sel in self._chunk_frames(data, conf):
+            sel_hdr = (
+                {k: v for k, v in sel.items() if k != "n"} if sel else None
+            )
+            records.append(ChunkRecord(off, len(blob), n0, name, sel=sel_hdr))
             body_parts.append(blob)
             off += len(blob)
         blob = _assemble_v2(
@@ -739,7 +800,7 @@ def compress_stream(
     yield prologue
     slabs = [data] if isinstance(data, np.ndarray) else data
     for slab in slabs:
-        for blob, _name, _n0 in eng._chunk_frames(np.asarray(slab), conf):
+        for blob, _name, _n0, _sel in eng._chunk_frames(np.asarray(slab), conf):
             yield blob
 
 

@@ -59,6 +59,7 @@ import numpy as np
 from . import lossless as ll_mod
 from . import pipeline as pl_mod
 from . import preprocess as pre_mod
+from . import telemetry as tel
 from . import transform as tr_mod
 from .config import CompressionConfig, ErrorBoundMode
 from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
@@ -222,7 +223,8 @@ class FastModeCompressor:
             return None
         if self.device != "force" and not fops.device_default():
             return None
-        means32, dev32 = fops.block_stats(xb.astype(np.float32, copy=False))
+        with tel.span("device_transfer", bytes=xb.nbytes):
+            means32, dev32 = fops.block_stats(xb.astype(np.float32, copy=False))
         return means32, dev32.astype(np.float64)
 
     # -- compression ----------------------------------------------------------
@@ -246,7 +248,8 @@ class FastModeCompressor:
         abs_eb = conf2.resolve_abs_eb(rng, absmax)
         if abs_eb <= 0:
             abs_eb = float(np.finfo(np.float64).tiny)
-        body_parts, fmeta = self._encode_blocks(pdata, abs_eb)
+        with tel.span("quantize", bytes=pdata.nbytes):
+            body_parts, fmeta = self._encode_blocks(pdata, abs_eb)
         spec = self.spec()
         spec["preprocessor"] = pre.name  # the EFFECTIVE preprocessor
         header = {
@@ -268,8 +271,23 @@ class FastModeCompressor:
             "pre_meta": pl_mod._clean_meta(pre_meta),
             "fast_meta": pl_mod._clean_meta(fmeta),
         }
-        body = self.lossless.compress(b"".join(body_parts))
+        with tel.span("lossless", bytes=sum(len(p) for p in body_parts)):
+            body = self.lossless.compress(b"".join(body_parts))
         blob = pack_container(header, body)
+        if tel.enabled():
+            nb, n_const = int(fmeta["nb"]), int(fmeta["n_const"])
+            tel.record_decision(tel.make_decision(
+                "sz3_fast",
+                "constant" if n_const * 2 > nb else "fixed_length",
+                scope="block-summary",
+                candidates=["constant", "fixed_length"],
+                estimates={"constant": float(n_const),
+                           "fixed_length": float(nb - n_const)},
+                realized_bits=8.0 * len(blob) / max(1, data.size),
+                n_elems=int(data.size),
+                fallbacks=int(fmeta["nfail"]),
+                device="device" if fmeta.get("device") else "host",
+            ))
         meta = None
         if with_stats:
             meta = {k: v for k, v in fmeta.items() if not isinstance(v, bytes)}
@@ -417,6 +435,7 @@ class FastModeCompressor:
             "means_len": len(means_bytes),
             "w_len": len(w_bytes),
             "planes_len": len(planes_bytes),
+            "device": 1 if dev_stats is not None else 0,  # routing taken
         }
         if fail_idx.size:
             fmeta["fail_idx"] = fail_idx.tobytes()

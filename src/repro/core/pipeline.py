@@ -40,6 +40,7 @@ import numpy as np
 from . import encoders as enc_mod
 from . import integrity
 from . import lossless as ll_mod
+from . import telemetry as tel
 from . import predictors as pred_mod
 from . import preprocess as pre_mod
 from . import quantizers as quant_mod
@@ -117,7 +118,9 @@ def pack_container(
     head = _MAGIC + np.asarray([len(hbytes), len(body)], np.int64).tobytes() + hbytes
     if not integrity.WRITE_TRAILERS:
         return head + body
-    return head + body + integrity.build_trailer(head, body, chunk_bounds)
+    with tel.span("integrity", bytes=len(body)):
+        trailer = integrity.build_trailer(head, body, chunk_bounds)
+    return head + body + trailer
 
 
 def container_body(blob: bytes, body_off: int) -> bytes:
@@ -192,8 +195,10 @@ class SZ3Compressor:
         if abs_eb <= 0:
             abs_eb = np.finfo(np.float64).tiny
         self.quantizer.begin(abs_eb, pdata.dtype)
-        codes, pred_meta = self.predictor.compress(pdata, self.quantizer, conf2)  # 2-5
-        enc_bytes = self.encoder.encode(codes)  # lines 9-10
+        with tel.span("predict", bytes=pdata.nbytes):  # predict+quantize fused
+            codes, pred_meta = self.predictor.compress(pdata, self.quantizer, conf2)  # 2-5
+        with tel.span("huffman", bytes=codes.nbytes):
+            enc_bytes = self.encoder.encode(codes)  # lines 9-10
         q_bytes = self.quantizer.save()  # line 8
         header = {
             "v": _VERSION,
@@ -219,7 +224,8 @@ class SZ3Compressor:
             "pre_meta": _clean_meta(pre_meta),
             "pred_meta": _clean_meta(pred_meta),
         }
-        body = self.lossless.compress(enc_bytes + q_bytes)  # line 11
+        with tel.span("lossless", bytes=len(enc_bytes) + len(q_bytes)):
+            body = self.lossless.compress(enc_bytes + q_bytes)  # line 11
         blob = pack_container(header, body)
         ratio = data.nbytes / max(1, len(blob))
         return CompressionResult(
@@ -296,7 +302,15 @@ def decompress(
         if verify == "salvage":
             return _decompress_salvage(blob, header, body_off, workers)
         if verify == "strict":
-            integrity.verify_container(blob, header, body_off)
+            try:
+                with tel.span("integrity", bytes=len(blob)):
+                    integrity.verify_container(blob, header, body_off)
+            except IntegrityError:
+                # one counter in the global serving registry, one in the
+                # active trace (if any) — failures stay visible either way
+                tel.metric_count("sz3_verify_failures_total")
+                tel.count("verify_failures")
+                raise
         return _decompress_dispatch(blob, header, body_off, workers, verify)
 
 
@@ -352,9 +366,10 @@ def _decompress_v1(
     enc_len = guard_alloc(header["enc_len"], "enc_len")
     q_len = guard_alloc(header["q_len"], "q_len")
     plain_len = guard_alloc(enc_len + q_len, "enc_len+q_len")
-    body = comp.lossless.decompress_bounded(
-        container_body(blob, body_off), plain_len
-    )
+    with tel.span("lossless", bytes=plain_len):
+        body = comp.lossless.decompress_bounded(
+            container_body(blob, body_off), plain_len
+        )
     if len(body) != plain_len:
         raise ContainerError(
             f"v1 body decompressed to {len(body)} bytes; header declares "
@@ -368,7 +383,8 @@ def _decompress_v1(
     )
     comp.quantizer.begin(header["abs_eb"], pdtype)
     comp.quantizer.load(q_bytes)
-    codes = comp.encoder.decode(enc_bytes, n_codes)
+    with tel.span("huffman", bytes=len(enc_bytes)):
+        codes = comp.encoder.decode(enc_bytes, n_codes)
     conf = CompressionConfig(
         mode=ErrorBoundMode(header["mode"]),
         eb=header["eb"],
@@ -377,14 +393,15 @@ def _decompress_v1(
         lorenzo_order=header["lorenzo_order"],
         quant_radius=spec["quant_radius"],
     )
-    pdata = comp.predictor.decompress(
-        np.asarray(codes),
-        pshape,
-        pdtype,
-        comp.quantizer,
-        conf,
-        header["pred_meta"],
-    )
+    with tel.span("predict", bytes=n_elems * pdtype.itemsize):
+        pdata = comp.predictor.decompress(
+            np.asarray(codes),
+            pshape,
+            pdtype,
+            comp.quantizer,
+            conf,
+            header["pred_meta"],
+        )
     data = comp.preprocessor.inverse(pdata, conf, header["pre_meta"])
     return data.astype(dtype).reshape(shape)
 

@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import telemetry as tel
 from .config import CompressionConfig
 from .quantizers import QuantizerBase
 
@@ -441,7 +442,8 @@ class LorenzoPredictor(Predictor):
         from ..kernels.lorenzo import ops as lops
 
         eb = quantizer.eb
-        codes32, draw = lops.encode_pipeline(data, eb=eb, radius=quantizer.radius)
+        with tel.span("device_transfer", bytes=data.nbytes):
+            codes32, draw = lops.encode_pipeline(data, eb=eb, radius=quantizer.radius)
         d = draw.astype(np.int64)
         x64 = np.asarray(data, np.float64)
         # The kernel prequantizes in float32 (vs float64 on the numpy route);

@@ -43,6 +43,7 @@ import numpy as np
 
 from . import lossless as ll_mod
 from . import pipeline as pl_mod
+from . import telemetry as tel
 from .chunking import DEFAULT_CANDIDATES, ChunkedCompressor
 from .config import CompressionConfig, ErrorBoundMode
 from .integrity import ContainerError, guard_alloc, guard_count, guard_shape
@@ -270,10 +271,13 @@ class TransformCompressor:
         if device:
             from ..kernels.transform import ops as tops
 
-            c = np.asarray(tops.fwd_pipeline(xp.astype(np.float32)), np.float64)
+            with tel.span("device_transfer", bytes=xp.nbytes):
+                c = np.asarray(tops.fwd_pipeline(xp.astype(np.float32)), np.float64)
         else:
-            c = _fwd_host(xp)
-        k = _quantize_coeffs(c, step)
+            with tel.span("predict", bytes=xp.nbytes):  # decorrelating stage
+                c = _fwd_host(xp)
+        with tel.span("quantize", bytes=c.nbytes):
+            k = _quantize_coeffs(c, step)
 
         # verify against every decode route — POST output-dtype cast, since
         # decode rounds the float64 reconstruction onto the storage grid and
@@ -304,8 +308,10 @@ class TransformCompressor:
             meta["fail_vals"] = x64[fail].tobytes()
 
         bands = _blockify(k)
-        payload = _encode_bands(bands)
-        body = self.lossless.compress(payload)
+        with tel.span("huffman", bytes=bands.nbytes):  # bitplane coding stage
+            payload = _encode_bands(bands)
+        with tel.span("lossless", bytes=len(payload)):
+            body = self.lossless.compress(payload)
         header = self._header(
             shape, xp.shape, data.dtype, conf, abs_eb, e, bands.shape[0],
             bands.shape[1], meta,

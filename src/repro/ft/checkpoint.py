@@ -41,6 +41,7 @@ from ..core import (
     decompress as sz3_decompress,
     integrity,
     sz3_lorenzo,
+    telemetry,
 )
 from ..core.integrity import IntegrityError, decode_errors
 from ..core.lossless import Zstd, make as make_lossless
@@ -250,7 +251,16 @@ class CheckpointManager:
             pstr = _path_str(path)
             pol = self.policy.for_path(pstr)
             arr = np.asarray(leaf)
-            blob, meta = encode_leaf(arr, pol, workers=self.workers)
+            t_leaf = time.perf_counter()
+            with telemetry.span("leaf", path=pstr, bytes=arr.nbytes):
+                blob, meta = encode_leaf(arr, pol, workers=self.workers)
+            d_leaf = time.perf_counter() - t_leaf
+            # per-leaf observability: which codec won, what it cost, what it
+            # bought — queryable from the manifest long after the run
+            meta["seconds"] = round(d_leaf, 6)
+            meta["ratio"] = round(arr.nbytes / max(1, len(blob)), 4)
+            telemetry.metric_observe("sz3_checkpoint_leaf_seconds", d_leaf)
+            telemetry.observe("checkpoint_leaf_seconds", d_leaf)
             fname = hashlib.sha1(pstr.encode()).hexdigest()[:16] + ".bin"
             (tmp / fname).write_bytes(blob)
             meta["file"] = fname
@@ -277,6 +287,8 @@ class CheckpointManager:
             "extra": extra or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        telemetry.metric_count("sz3_checkpoint_saves_total")
+        telemetry.metric_count("sz3_checkpoint_bytes_out_total", total_out)
         # fsync the directory entries before rename (durability)
         for f in tmp.iterdir():
             fd = os.open(f, os.O_RDONLY)

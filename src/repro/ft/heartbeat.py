@@ -21,6 +21,10 @@ import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Optional
 
+from repro.core import telemetry
+
+log = telemetry.get_logger("heartbeat")
+
 
 @dataclasses.dataclass
 class Decision:
@@ -53,6 +57,20 @@ class HeartbeatMonitor:
             self.step_times[host].append(step_time_s)
 
     def observe(self) -> List[Decision]:
+        """Evaluate the fleet; non-``ok`` decisions are logged (structured
+        key=value lines, ``repro.telemetry.heartbeat`` namespace) and counted
+        in the global metrics registry — the policy itself stays pure."""
+        out = self._observe()
+        for d in out:
+            if d.kind == "dead":
+                telemetry.metric_count("sz3_heartbeat_dead_total")
+                log.error("host_dead", host=d.host, detail=d.detail)
+            elif d.kind == "straggler":
+                telemetry.metric_count("sz3_heartbeat_straggler_total")
+                log.warning("host_straggler", host=d.host, detail=d.detail)
+        return out
+
+    def _observe(self) -> List[Decision]:
         now = self.clock()
         out: List[Decision] = []
         all_times = [t for h in self.hosts for t in self.step_times[h]]

@@ -17,7 +17,10 @@ import numpy as np
 
 import repro.configs as configs
 from repro import models
+from repro.core import telemetry
 from repro.parallel import ParallelPlan
+
+log = telemetry.get_logger("serve")
 
 
 def main():
@@ -60,6 +63,14 @@ def main():
         "trailers verified) before counting it evicted; --no-offload-verify "
         "skips the read-back pass",
     )
+    ap.add_argument(
+        "--metrics",
+        action=argparse.BooleanOptionalAction,
+        default=False,
+        help="dump the Prometheus-style metrics page (decode-step and "
+        "offload-frame latency percentiles, verify-failure counters) and the "
+        "per-stage offload trace summary before exiting",
+    )
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
@@ -81,13 +92,22 @@ def main():
     out = [tok]
     t0 = time.perf_counter()
     for _ in range(args.tokens):
+        ts = time.perf_counter()
         logits, cache = step(params, cache, tok)
         tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+        tok.block_until_ready()
+        telemetry.metric_observe(
+            "sz3_decode_step_seconds", time.perf_counter() - ts
+        )
         out.append(tok)
     dt = time.perf_counter() - t0
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"{args.arch} kv={args.kv}: {args.tokens * args.batch / dt:.1f} tok/s")
-    print("sample:", seqs[0][:12].tolist())
+    log.info(
+        "decode_done", arch=args.arch, kv=args.kv,
+        tok_per_s=args.tokens * args.batch / dt,
+        sample=str(seqs[0][:12].tolist()),
+    )
+    tr = None
     if args.offload_kv in ("chunked", "auto", "hybrid", "quality", "fast"):
         candidates = None
         if args.offload_kv == "auto":
@@ -96,14 +116,31 @@ def main():
             candidates = ("sz3_hybrid",)
         elif args.offload_kv == "fast":
             candidates = ("sz3_fast",)
-        offload_cache(
-            cache,
-            eb=args.offload_eb,
-            workers=args.offload_workers,
-            candidates=candidates,
-            target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
-            verify=args.offload_verify,
+        scope = (
+            telemetry.trace("kv_offload") if args.metrics
+            else _NullScope()
         )
+        with scope as tr:
+            offload_cache(
+                cache,
+                eb=args.offload_eb,
+                workers=args.offload_workers,
+                candidates=candidates,
+                target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
+                verify=args.offload_verify,
+            )
+    if args.metrics:
+        print(telemetry.prometheus_text(), end="")
+        if tr is not None:
+            print(telemetry.trace_summary(tr))
+
+
+class _NullScope:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc) -> bool:
+        return False
 
 
 def offload_cache(
@@ -158,6 +195,20 @@ def offload_cache(
     n_in = n_out = n_leaves = n_frames = 0
     worst_psnr = float("inf")
     t_verify = 0.0
+
+    def _verify_frame(frame: bytes) -> float:
+        """Strict read-back decode, timed into the request-latency histogram;
+        failures are counted (globally and in any active trace) and re-raised."""
+        tv = time.perf_counter()
+        try:
+            sz3_decompress(frame, verify="strict")
+        except Exception:
+            telemetry.metric_count("sz3_offload_verify_failures_total")
+            raise
+        dv = time.perf_counter() - tv
+        telemetry.metric_observe("sz3_offload_verify_seconds", dv)
+        return dv
+
     t0 = time.perf_counter()
     for leaf in jax.tree.leaves(cache):
         dt = getattr(leaf, "dtype", None)
@@ -166,14 +217,13 @@ def offload_cache(
             continue
         a = np.asarray(jnp.asarray(leaf, jnp.float32))
         arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
+        tl = time.perf_counter()
         if quality is not None:
             res = quality.compress(arr)
             n_out += len(res.blob)
             worst_psnr = min(worst_psnr, res.meta["quality"]["achieved_psnr"])
             if verify:
-                tv = time.perf_counter()
-                sz3_decompress(res.blob, verify="strict")
-                t_verify += time.perf_counter() - tv
+                t_verify += _verify_frame(res.blob)
                 n_frames += 1
         else:
             for frame in compress_stream(
@@ -183,28 +233,31 @@ def offload_cache(
                 n_out += len(frame)
                 # payload frames only: the stream prologue is not a container
                 if verify and frame[:4] == b"SZ3J":
-                    tv = time.perf_counter()
-                    sz3_decompress(frame, verify="strict")
-                    t_verify += time.perf_counter() - tv
+                    t_verify += _verify_frame(frame)
                     n_frames += 1
+        telemetry.metric_observe(
+            "sz3_offload_leaf_seconds", time.perf_counter() - tl
+        )
         n_in += arr.nbytes
         n_leaves += 1
     dt = time.perf_counter() - t0
-    vnote = (
-        f", verified {n_frames} frames in {t_verify:.2f}s" if verify else ""
+    telemetry.metric_count("sz3_offload_leaves_total", n_leaves)
+    telemetry.metric_count("sz3_offload_bytes_in_total", n_in)
+    telemetry.metric_count("sz3_offload_bytes_out_total", n_out)
+    fields = dict(
+        leaves=n_leaves,
+        ratio=n_in / max(1, n_out),
+        MB_per_s=n_in / 1e6 / max(dt, 1e-9),
     )
+    if verify:
+        fields.update(verified_frames=n_frames, verify_seconds=t_verify)
     if quality is not None:
-        print(
-            f"kv offload (quality, target {target_psnr:g} dB): {n_leaves} leaves, "
-            f"{n_in / max(1, n_out):.2f}x ratio, worst leaf {worst_psnr:.1f} dB, "
-            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s{vnote}"
+        log.info(
+            "kv_offload", mode="quality", target_psnr_db=target_psnr,
+            worst_leaf_psnr_db=worst_psnr, **fields,
         )
     else:
-        print(
-            f"kv offload (chunked stream, rel eb={eb:g}): {n_leaves} leaves, "
-            f"{n_in / max(1, n_out):.2f}x ratio, "
-            f"{n_in / 1e6 / max(dt, 1e-9):.1f} MB/s{vnote}"
-        )
+        log.info("kv_offload", mode="chunked_stream", rel_eb=eb, **fields)
     return n_in, n_out
 
 
