@@ -1,0 +1,193 @@
+"""Serving-path latency bench: random-access chunk fetches, cached vs cold.
+
+The throughput bench (``bench_throughput``) answers "how fast does a bulk
+stream move"; this one answers the serving question — what latency does ONE
+random-access read pay, and what do the PR 9 caches buy.  Three measurements:
+
+  * **cold vs cached random access** — ``decompress_chunk`` with a fresh
+    header parse + cleared Huffman-table LRU per fetch (what every read paid
+    before the decode-state cache) against (a) fetches that reuse a parsed
+    :class:`~repro.core.chunking.ChunkedIndex` and warm tables (metadata
+    layer, reported) and (b) fetches served by the decoded-chunk LRU
+    (repeated reads of hot pages — the serving steady state).  The hot-path
+    p99 quotient is the headline gate (>= 5x): profiling shows the entropy
+    decode dominates per-chunk latency ~10x over parse + table build, so
+    only the result layer can buy an order of magnitude.
+  * **service request latency** — p50/p99 of ``await fetch`` through the
+    full async path (queue, coalescing dispatcher, worker pool, strict
+    per-chunk CRC verify), plus the index-cache hit rate of the workload.
+  * **correctness under concurrency** — 4-worker concurrent fetches and
+    coalesced batches must be byte-identical to serial reads (1.0/0.0 rows
+    gated in ``check_regression``).
+
+``python -m benchmarks.bench_serving`` writes ``BENCH_PR9.json`` at the repo
+root; CI gates it via ``check_regression`` QUALITY_GATES.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import CompressionConfig, ErrorBoundMode, encoders, sz3_chunked
+from repro.core.chunking import decompress_chunk, parse_chunked_index
+from repro.serve.offload import DecodeStateCache, OffloadService
+
+from . import datasets
+
+#: small chunks on purpose: serving reads are page-granular, and the fixed
+#: per-read costs (header parse, table build) loom largest when the chunk
+#: payload is small — exactly the regime the decode-state cache targets
+CHUNK_BYTES = 8192
+
+
+def _build_container(seed: int = 3) -> bytes:
+    data = datasets.domain_field("miranda_u", seed).astype(np.float32)
+    data = np.ascontiguousarray(data.reshape(data.shape[0], -1))
+    conf = CompressionConfig(mode=ErrorBoundMode.REL, eb=1e-3)
+    comp = sz3_chunked(chunk_bytes=CHUNK_BYTES)
+    return comp.compress(data, conf).blob
+
+
+def random_access_rows(full: bool = False, seed: int = 3) -> Dict[str, float]:
+    """Cold / warm-metadata / hot-chunk per-fetch latency, one container."""
+    blob = _build_container(seed)
+    idx = parse_chunked_index(blob)
+    n = idx.n_chunks
+    fetches = 400 if full else 120
+    rng = np.random.default_rng(seed)
+    order = rng.integers(0, n, fetches)
+
+    cold = np.empty(fetches)
+    for i, c in enumerate(order):
+        encoders.clear_table_cache(reset_stats=False)
+        t0 = time.perf_counter()
+        decompress_chunk(blob, int(c))  # fresh parse + cold tables
+        cold[i] = time.perf_counter() - t0
+
+    # warm metadata: parsed index reused, table LRU hot after one pass
+    for c in range(n):
+        decompress_chunk(blob, c, parsed=idx)
+    warm = np.empty(fetches)
+    for i, c in enumerate(order):
+        t0 = time.perf_counter()
+        decompress_chunk(blob, int(c), parsed=idx)
+        warm[i] = time.perf_counter() - t0
+
+    # hot: repeated reads served by the decoded-chunk LRU (steady state of
+    # a serving loop that re-reads resident KV pages)
+    cache = DecodeStateCache(max_entries=8, max_chunk_bytes=64 << 20)
+    for c in range(n):  # populate
+        if cache.get_chunk(blob, c) is None:
+            cache.put_chunk(blob, c, decompress_chunk(blob, c, parsed=idx))
+    hot = np.empty(fetches)
+    for i, c in enumerate(order):
+        t0 = time.perf_counter()
+        arr = cache.get_chunk(blob, int(c))
+        if arr is None:  # pragma: no cover - budget sized to hold all chunks
+            arr = decompress_chunk(blob, int(c), parsed=idx)
+            cache.put_chunk(blob, int(c), arr)
+        hot[i] = time.perf_counter() - t0
+
+    p = lambda a, q: float(np.percentile(a, q) * 1e3)
+    return {
+        "n_chunks": n,
+        "chunk_bytes": CHUNK_BYTES,
+        "fetches": fetches,
+        "uncached_p50_ms": round(p(cold, 50), 4),
+        "uncached_p99_ms": round(p(cold, 99), 4),
+        "warm_meta_p50_ms": round(p(warm, 50), 4),
+        "warm_meta_p99_ms": round(p(warm, 99), 4),
+        "cached_p50_ms": round(p(hot, 50), 4),
+        "cached_p99_ms": round(p(hot, 99), 4),
+        "p99_speedup_warm_meta": round(p(cold, 99) / max(p(warm, 99), 1e-9), 2),
+        "p50_speedup_cached": round(p(cold, 50) / max(p(hot, 50), 1e-9), 2),
+        "p99_speedup_cached": round(p(cold, 99) / max(p(hot, 99), 1e-9), 2),
+    }
+
+
+def service_rows(full: bool = False, seed: int = 3) -> Dict[str, float]:
+    """End-to-end async service: latency percentiles, hit rate, identity."""
+    blob = _build_container(seed)
+    n = parse_chunked_index(blob).n_chunks
+    serial = [decompress_chunk(blob, i) for i in range(n)]
+    fetches = 300 if full else 120
+    rng = np.random.default_rng(seed + 1)
+    order = [int(c) for c in rng.integers(0, n, fetches)]
+
+    async def _run() -> Dict[str, float]:
+        svc = OffloadService(workers=4, coalesce_ms=0.5, cache_entries=8)
+        try:
+            await svc.put_compressed("bench", "page", blob, n_in=None)
+            # 4-worker concurrent fetch of every chunk vs serial reads
+            outs = await asyncio.gather(
+                *[svc.fetch("bench", "page", i) for i in range(n)]
+            )
+            identical = all(
+                np.array_equal(a, b) for a, b in zip(outs, serial)
+            )
+            # coalesced burst (one enqueue round) vs a no-coalescing service
+            svc0 = OffloadService(workers=4, coalesce_ms=0.0)
+            await svc0.put_compressed("bench", "page", blob, n_in=None)
+            batched = await asyncio.gather(
+                *[svc.fetch("bench", "page", c) for c in order[:32]]
+            )
+            unbatched = await asyncio.gather(
+                *[svc0.fetch("bench", "page", c) for c in order[:32]]
+            )
+            coalesced_equal = all(
+                np.array_equal(a, b) for a, b in zip(batched, unbatched)
+            )
+            await svc0.close()
+            # request-latency distribution, one awaited fetch at a time;
+            # hit rates are measured over this steady-state phase only (the
+            # preceding identity pass is the mandatory cold fill)
+            before = svc.cache.stats()
+            lat = np.empty(fetches)
+            for i, c in enumerate(order):
+                t0 = time.perf_counter()
+                await svc.fetch("bench", "page", c)
+                lat[i] = time.perf_counter() - t0
+            stats = svc.cache.stats()
+            d = lambda k: stats[k] - before[k]
+            idx_rate = d("hits") / max(1, d("hits") + d("misses"))
+            chunk_rate = d("chunk_hits") / max(
+                1, d("chunk_hits") + d("chunk_misses")
+            )
+            return {
+                "service_fetches": fetches,
+                "service_p50_ms": round(float(np.percentile(lat, 50) * 1e3), 4),
+                "service_p99_ms": round(float(np.percentile(lat, 99) * 1e3), 4),
+                "index_cache_hit_rate": round(idx_rate, 4),
+                "cache_hit_rate": round(chunk_rate, 4),
+                "concurrent_byte_identical": 1.0 if identical else 0.0,
+                "coalesced_equal": 1.0 if coalesced_equal else 0.0,
+            }
+        finally:
+            await svc.close()
+
+    return asyncio.run(_run())
+
+
+def serving_rows(full: bool = False, seed: int = 3) -> Dict[str, float]:
+    out = random_access_rows(full, seed)
+    out.update(service_rows(full, seed))
+    return out
+
+
+def main(full: bool = False, tag: str = "PR9") -> Dict[str, float]:
+    from .bench_throughput import write_bench_json
+
+    rows = serving_rows(full)
+    perf = {"serving": rows}
+    print("serving:", json.dumps(rows))
+    path = write_bench_json({"perf": perf}, tag)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -524,6 +524,8 @@ def telemetry_rows(full: bool = False, seed: int = 3, trace_path=None):
 
 
 def perf_rows(full: bool = False, trace_path=None):
+    from .bench_serving import serving_rows  # lazy: avoids a module cycle
+
     return {
         "lossless_backend": lossless.effective_backend("zstd"),
         "cpu_count": os.cpu_count(),
@@ -535,6 +537,7 @@ def perf_rows(full: bool = False, trace_path=None):
         "fast": fast_rows(full),
         "integrity": integrity_rows(full),
         "telemetry": telemetry_rows(full, trace_path=trace_path),
+        "serving": serving_rows(full),
         "timing_percentiles": timing_percentiles(),
     }
 

@@ -148,6 +148,40 @@ QUALITY_GATES = [
         "telemetry traced-path overhead < 5% (fast tier)",
         lambda v, perf: v < 5.0,
     ),
+    # serving layer (PR9): the decode-state cache must buy >= 5x p99 latency
+    # on repeated random-access chunk fetches vs the uncached path (both
+    # timed in the same run on the same machine — machine-independent), the
+    # steady-state hit rate of the service workload must stay >= 90%, and
+    # concurrent/coalesced fetch results must be byte-identical to serial
+    # (1.0 rows — any mismatch is a correctness failure, not a perf one)
+    (
+        ("serving", "p99_speedup_cached"),
+        "serving cached random-access p99 >= 5x uncached",
+        lambda v, perf: v >= 5.0,
+    ),
+    (
+        ("serving", "cache_hit_rate"),
+        "serving steady-state chunk-cache hit rate >= 90%",
+        lambda v, perf: v >= 0.90,
+    ),
+    (
+        ("serving", "concurrent_byte_identical"),
+        "4-worker concurrent fetches byte-identical to serial",
+        lambda v, perf: v >= 1.0,
+    ),
+    (
+        ("serving", "coalesced_equal"),
+        "coalesced-batch fetch results equal unbatched",
+        lambda v, perf: v >= 1.0,
+    ),
+    # generous absolute ceiling: a request through the full async path
+    # (queue + coalesce + pool + strict CRC) collapsing past 250 ms p99 on
+    # any plausible runner means the serving path itself broke
+    (
+        ("serving", "service_p99_ms"),
+        "service request p99 under 250 ms",
+        lambda v, perf: v < 250.0,
+    ),
 ]
 
 

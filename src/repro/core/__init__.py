@@ -37,9 +37,11 @@ from .pipeline import (  # noqa: I001  (chunking must import after pipeline)
 from . import chunking
 from .chunking import (
     ChunkedCompressor,
+    ChunkedIndex,
     PWRelChunkedCompressor,
     compress_stream,
     decompress_chunk,
+    parse_chunked_index,
     decompress_stream,
     frames_to_blob,
     read_frames,
@@ -127,6 +129,8 @@ __all__ = [
     "compress_stream",
     "decompress_stream",
     "decompress_chunk",
+    "parse_chunked_index",
+    "ChunkedIndex",
     "frames_to_blob",
     "write_frames",
     "read_frames",

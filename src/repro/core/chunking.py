@@ -66,6 +66,7 @@ from .config import CompressionConfig, ErrorBoundMode
 from .integrity import (
     ChunkDamage,
     ContainerError,
+    IntegrityError,
     SalvageReport,
     decode_errors,
     guard_count,
@@ -754,8 +755,44 @@ def salvage_chunked(
     return out.reshape(shape), report
 
 
-def decompress_chunk(blob: bytes, index: int, verify: str = "strict") -> np.ndarray:
-    """Random access: decode only chunk ``index`` of a v2/v4 container."""
+@dataclasses.dataclass(frozen=True)
+class ChunkedIndex:
+    """Parsed random-access state for one v2/v4 container.
+
+    Everything :func:`decompress_chunk` needs that is a pure function of the
+    blob bytes: the msgpack header, validated chunk bounds, and the trailer's
+    per-chunk CRCs (when present).  Build once with
+    :func:`parse_chunked_index`, then pass to repeated ``decompress_chunk``
+    calls — the serving layer's LRU holds these so a fetch touches only the
+    requested chunk's bytes.
+    """
+
+    header: Dict[str, Any]
+    body_off: int
+    body_len: int
+    bounds: Tuple[Tuple[int, int], ...]
+    kind: str
+    algo: Optional[str]  # trailer checksum algorithm, None without trailer
+    chunk_crcs: Optional[Tuple[int, ...]]
+    header_ok: bool  # header CRC verified (True when no trailer to check)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.bounds)
+
+
+def parse_chunked_index(blob: bytes, verify: str = "strict") -> ChunkedIndex:
+    """Parse the header + chunk table + trailer CRCs of a v2/v4 container.
+
+    Under ``verify="strict"`` the header CRC is checked here, once — a
+    damaged chunk table must not direct reads at the wrong bytes — and a
+    container whose header advertises a trailer (``itg``) that is missing
+    raises (stripped-trailer downgrade).  Per-chunk CRCs are carried in the
+    returned index but NOT checked here; :func:`decompress_chunk` checks
+    only the requested chunk's, keeping random access O(chunk).
+    """
+    if verify not in pl_mod.VERIFY_MODES:
+        raise ValueError(f"verify must be one of {pl_mod.VERIFY_MODES}")
     with decode_errors("chunked container"):
         header, body_off = pl_mod.parse_header(blob)
         if header.get("v", 1) < _VERSION2 or header.get("kind") not in (
@@ -763,10 +800,79 @@ def decompress_chunk(blob: bytes, index: int, verify: str = "strict") -> np.ndar
             "pwr",
         ):
             raise ContainerError("not a chunked (v2) or pwr (v4) container")
-        body = pl_mod.container_body(blob, body_off)
-        bounds = integrity.chunk_bounds_of(header, len(body))
-        off, ln = bounds[index]  # IndexError -> ContainerError via decode_errors
-        return pl_mod.decompress(body[off : off + ln], verify=verify)
+        body_len = len(pl_mod.container_body(blob, body_off))
+        bounds = tuple(integrity.chunk_bounds_of(header, body_len))
+        tr = integrity.read_trailer(blob)
+        algo: Optional[str] = None
+        crcs: Optional[Tuple[int, ...]] = None
+        header_ok = True
+        if tr is not None and tr.start == body_off + body_len:
+            algo = tr.algo
+            header_ok = (
+                integrity.checksum(blob[:body_off], algo=tr.algo) == tr.header_crc
+            )
+            if len(tr.chunk_crcs) == len(bounds):
+                crcs = tr.chunk_crcs
+        elif header.get("itg") and verify == "strict":
+            raise IntegrityError(
+                "header advertises an integrity trailer but none is present "
+                "(trailer stripped or truncated)",
+                region="trailer",
+            )
+        if verify == "strict" and not header_ok:
+            raise IntegrityError(
+                "container header fails its checksum", region="header"
+            )
+        return ChunkedIndex(
+            header=header,
+            body_off=body_off,
+            body_len=body_len,
+            bounds=bounds,
+            kind=header.get("kind"),
+            algo=algo,
+            chunk_crcs=crcs,
+            header_ok=header_ok,
+        )
+
+
+def decompress_chunk(
+    blob: bytes,
+    index: int,
+    verify: str = "strict",
+    parsed: Optional[ChunkedIndex] = None,
+) -> np.ndarray:
+    """Random access: decode only chunk ``index`` of a v2/v4 container.
+
+    O(chunk), not O(container): under ``verify="strict"`` only the header
+    CRC (checked at parse time) and the *requested* chunk's CRC are
+    validated — a corrupt sibling chunk does not fail the read.  When the
+    outer per-chunk CRC matches, the nested blob's own verification is
+    skipped (the outer CRC just covered every nested byte, trailer
+    included); legacy trailer-less containers fall back to the nested
+    blob's strict path.
+
+    ``parsed`` lets callers amortize header/trailer parsing across many
+    reads of the same container (see :func:`parse_chunked_index`).
+    """
+    if parsed is None:
+        parsed = parse_chunked_index(blob, verify=verify)
+    with decode_errors("chunked container"):
+        off, ln = parsed.bounds[index]  # IndexError -> ContainerError
+        lo = parsed.body_off + off
+        chunk = blob[lo : lo + ln]
+        nested = verify
+        if verify == "strict" and parsed.chunk_crcs is not None:
+            if not parsed.header_ok:
+                raise IntegrityError(
+                    "container header fails its checksum", region="header"
+                )
+            if integrity.checksum(chunk, algo=parsed.algo) != parsed.chunk_crcs[index]:
+                raise IntegrityError(
+                    f"container chunk {index} fails its checksum",
+                    chunk_index=index,
+                )
+            nested = "off"
+        return pl_mod.decompress(chunk, verify=nested)
 
 
 # ---------------------------------------------------------------------------

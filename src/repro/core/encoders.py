@@ -33,7 +33,9 @@ from __future__ import annotations
 
 import abc
 import heapq
-from typing import Dict, Tuple
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -139,26 +141,59 @@ class _HuffTable:
 #: built tables keyed by code-length signature — the chunked engine emits one
 #: Huffman stream per chunk and identical chunks (or identical length
 #: profiles, which is all a canonical table depends on) are common, so
-#: rebuilding the 2^16 decode table per chunk is pure waste.
-_TABLE_CACHE: Dict[bytes, _HuffTable] = {}
+#: rebuilding the 2^16 decode table per chunk is pure waste.  A proper LRU
+#: (not clear-on-full): the serving layer interleaves fetches across many
+#: containers, and one pathological stream of unique signatures must not
+#: flush every hot tenant's table at once.  Lock-guarded: the async service
+#: decodes on a thread pool.
+_TABLE_CACHE: "OrderedDict[bytes, _HuffTable]" = OrderedDict()
 _TABLE_CACHE_MAX = 128
+_TABLE_LOCK = threading.Lock()
+_TABLE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _cached_table(lengths: np.ndarray) -> _HuffTable:
     """Canonical table over symbols ``0..k-1`` with the given code lengths.
 
     Keyed by the length signature (canonical codes are a pure function of
-    it).  Bounded: a pathological stream of unique signatures clears the
-    cache rather than growing it without limit.
+    it), LRU-bounded at ``_TABLE_CACHE_MAX`` entries.
     """
-    key = lengths.tobytes()
-    table = _TABLE_CACHE.get(key)
-    if table is None:
-        if len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
-            _TABLE_CACHE.clear()
-        table = _HuffTable(np.arange(lengths.size, dtype=np.int64), np.asarray(lengths, np.uint8).copy())
+    key = np.asarray(lengths, np.uint8).tobytes()
+    with _TABLE_LOCK:
+        table = _TABLE_CACHE.get(key)
+        if table is not None:
+            _TABLE_CACHE.move_to_end(key)
+            _TABLE_STATS["hits"] += 1
+            return table
+        _TABLE_STATS["misses"] += 1
+    # build outside the lock (the 2^16 np.repeat is the expensive part);
+    # concurrent misses on the same signature build twice, last write wins
+    table = _HuffTable(
+        np.arange(lengths.size, dtype=np.int64), np.asarray(lengths, np.uint8).copy()
+    )
+    with _TABLE_LOCK:
         _TABLE_CACHE[key] = table
+        _TABLE_CACHE.move_to_end(key)
+        while len(_TABLE_CACHE) > _TABLE_CACHE_MAX:
+            _TABLE_CACHE.popitem(last=False)
+            _TABLE_STATS["evictions"] += 1
     return table
+
+
+def table_cache_stats() -> Dict[str, int]:
+    """Hit/miss/eviction counts plus current size of the decode-table LRU."""
+    with _TABLE_LOCK:
+        out = dict(_TABLE_STATS)
+        out["size"] = len(_TABLE_CACHE)
+    return out
+
+
+def clear_table_cache(reset_stats: bool = True) -> None:
+    with _TABLE_LOCK:
+        _TABLE_CACHE.clear()
+        if reset_stats:
+            for k in _TABLE_STATS:
+                _TABLE_STATS[k] = 0
 
 
 def _bits_of_codes(codes: np.ndarray, lens: np.ndarray) -> np.ndarray:
@@ -450,6 +485,42 @@ def _alphabet_of(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     return vals, np.bincount(inv), inv.astype(np.int64)
 
 
+class HuffmanDecodeHandle:
+    """Parsed, reusable decode state for one Huffman blob.
+
+    Holds everything :meth:`HuffmanEncoder.decode` derives from the blob
+    prefix — alphabet values, the built canonical table, and the stream
+    offset — so a caller that decodes the same blob repeatedly (the serving
+    layer's random-access reads) pays the header parse and table build once.
+    The handle pins its table, so it stays valid even if the signature is
+    evicted from the module LRU.
+    """
+
+    __slots__ = ("vals", "table", "stream_pos")
+
+    def __init__(self, vals: np.ndarray, table: _HuffTable, stream_pos: int):
+        self.vals = vals
+        self.table = table
+        self.stream_pos = stream_pos
+
+
+def huffman_decode_handle(buf: bytes) -> Optional[HuffmanDecodeHandle]:
+    """Build a :class:`HuffmanDecodeHandle` for a ``HuffmanEncoder`` blob.
+
+    Returns ``None`` for the empty-stream blob (k == 0), which decodes
+    without any table.
+    """
+    k = int(np.frombuffer(buf, np.int64, count=1)[0])
+    if k == 0:
+        return None
+    pos = 8
+    vals = np.frombuffer(buf, np.int64, count=k, offset=pos)
+    pos += k * 8
+    lens = np.frombuffer(buf, np.uint8, count=k, offset=pos)
+    pos += k
+    return HuffmanDecodeHandle(vals, _cached_table(lens), pos)
+
+
 class HuffmanEncoder(Encoder):
     """Canonical Huffman built from the observed code frequencies [36].
 
@@ -476,20 +547,15 @@ class HuffmanEncoder(Encoder):
         head = np.asarray([vals.size], np.int64).tobytes()
         return head + vals.astype(np.int64).tobytes() + lens.tobytes() + stream
 
-    def decode(self, buf, n):
-        k = int(np.frombuffer(buf, np.int64, count=1)[0])
-        if k == 0:
+    def decode(self, buf, n, handle: Optional[HuffmanDecodeHandle] = None):
+        if handle is None:
+            handle = huffman_decode_handle(buf)
+        if handle is None:  # empty stream (k == 0)
             return np.zeros(0, np.int64)
-        pos = 8
-        vals = np.frombuffer(buf, np.int64, count=k, offset=pos)
-        pos += k * 8
-        lens = np.frombuffer(buf, np.uint8, count=k, offset=pos)
-        pos += k
-        table = _cached_table(lens)
-        idx, _ = _decode_stream(buf, pos, table)
+        idx, _ = _decode_stream(buf, handle.stream_pos, handle.table)
         if idx.size != n:
             raise ValueError(f"huffman stream length mismatch {idx.size} != {n}")
-        return vals[idx]
+        return handle.vals[idx]
 
 
 class LegacyHuffmanEncoder(HuffmanEncoder):

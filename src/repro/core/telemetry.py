@@ -56,6 +56,8 @@ __all__ = [
     "trace_summary",
     "metric_count",
     "metric_observe",
+    "metric_gauge",
+    "metric_gauge_add",
     "prometheus_text",
     "reset_metrics",
     "get_logger",
@@ -732,11 +734,29 @@ class MetricsRegistry:
     def __init__(self):
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
         self._hists: Dict[str, StreamingHistogram] = {}
 
     def count(self, name: str, inc: Union[int, float] = 1) -> None:
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + inc
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set a gauge to an absolute value (last-write-wins)."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def gauge_add(self, name: str, delta: Union[int, float]) -> float:
+        """Adjust a gauge by ``delta`` (e.g. queue depth +1/-1); returns the
+        new value so callers can assert monotone invariants in tests."""
+        with self._lock:
+            val = self._gauges.get(name, 0.0) + delta
+            self._gauges[name] = val
+            return val
+
+    def gauge_value(self, name: str) -> float:
+        with self._lock:
+            return self._gauges.get(name, 0.0)
 
     def observe(self, name: str, value: float) -> None:
         with self._lock:
@@ -748,14 +768,17 @@ class MetricsRegistry:
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()
+            self._gauges.clear()
             self._hists.clear()
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             counters = dict(self._counters)
+            gauges = dict(self._gauges)
             hists = dict(self._hists)
         return {
             "counters": counters,
+            "gauges": gauges,
             "histograms": {k: h.snapshot() for k, h in hists.items()},
         }
 
@@ -764,11 +787,16 @@ class MetricsRegistry:
         ``summary`` (quantile series + ``_sum``/``_count``)."""
         with self._lock:
             counters = sorted(self._counters.items())
+            gauges = sorted(self._gauges.items())
             hists = sorted(self._hists.items())
         lines: List[str] = []
         for name, val in counters:
             n = _prom_name(name)
             lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {val:g}")
+        for name, val in gauges:
+            n = _prom_name(name)
+            lines.append(f"# TYPE {n} gauge")
             lines.append(f"{n} {val:g}")
         for name, hist in hists:
             n = _prom_name(name)
@@ -796,6 +824,14 @@ def metric_count(name: str, inc: Union[int, float] = 1) -> None:
 
 def metric_observe(name: str, value: float) -> None:
     METRICS.observe(name, value)
+
+
+def metric_gauge(name: str, value: float) -> None:
+    METRICS.gauge(name, value)
+
+
+def metric_gauge_add(name: str, delta: Union[int, float]) -> float:
+    return METRICS.gauge_add(name, delta)
 
 
 def prometheus_text() -> str:

@@ -56,6 +56,21 @@ def main():
         help="chunk-compression threads for the KV offload stream",
     )
     ap.add_argument(
+        "--offload-async",
+        action=argparse.BooleanOptionalAction,
+        default=False,
+        help="route the offload through the async multi-tenant service "
+        "(repro.serve.offload): leaves compress concurrently on the worker "
+        "pool and verification reads go through the coalescing per-chunk "
+        "fetch path instead of full-container decodes",
+    )
+    ap.add_argument(
+        "--offload-executor",
+        default="thread",
+        choices=["thread", "process"],
+        help="worker pool flavor for --offload-async",
+    )
+    ap.add_argument(
         "--offload-verify",
         action=argparse.BooleanOptionalAction,
         default=True,
@@ -121,14 +136,24 @@ def main():
             else _NullScope()
         )
         with scope as tr:
-            offload_cache(
-                cache,
-                eb=args.offload_eb,
-                workers=args.offload_workers,
-                candidates=candidates,
-                target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
-                verify=args.offload_verify,
-            )
+            if args.offload_async and args.offload_kv != "quality":
+                offload_cache_async(
+                    cache,
+                    eb=args.offload_eb,
+                    workers=args.offload_workers,
+                    candidates=candidates,
+                    verify=args.offload_verify,
+                    executor=args.offload_executor,
+                )
+            else:
+                offload_cache(
+                    cache,
+                    eb=args.offload_eb,
+                    workers=args.offload_workers,
+                    candidates=candidates,
+                    target_psnr=args.offload_psnr if args.offload_kv == "quality" else None,
+                    verify=args.offload_verify,
+                )
     if args.metrics:
         print(telemetry.prometheus_text(), end="")
         if tr is not None:
@@ -141,6 +166,27 @@ class _NullScope:
 
     def __exit__(self, *exc) -> bool:
         return False
+
+
+def _iter_kv_leaves(cache):
+    """Yield ``(arr, src_dtype_name, src_itemsize)`` per cache leaf.
+
+    ``arr`` is the 2-D float32 working copy the compressor consumes, or
+    ``None`` for leaves rejected by the size/dtype filter (callers count
+    those as skipped).  ``src_itemsize`` is the itemsize of the leaf's OWN
+    dtype — bf16 pages are 2 B/elem at rest, and offload accounting must
+    charge what eviction actually frees, not the float32 working copy.
+    """
+    for leaf in jax.tree.leaves(cache):
+        dt = getattr(leaf, "dtype", None)
+        # jnp.issubdtype, not numpy dtype.kind: bfloat16 is kind 'V' to numpy
+        if dt is None or not jnp.issubdtype(dt, jnp.floating) or leaf.size < 1024:
+            yield None, None, 0
+            continue
+        a = np.asarray(jnp.asarray(leaf, jnp.float32))
+        arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
+        sdt = np.dtype(dt)
+        yield arr, sdt.name, sdt.itemsize
 
 
 def offload_cache(
@@ -192,8 +238,9 @@ def offload_cache(
         if target_psnr is not None
         else None
     )
-    n_in = n_out = n_leaves = n_frames = 0
-    worst_psnr = float("inf")
+    n_in = n_out = n_leaves = n_frames = n_skipped = 0
+    worst_psnr = None  # None until a leaf actually qualifies
+    src_dtypes = set()
     t_verify = 0.0
 
     def _verify_frame(frame: bytes) -> float:
@@ -210,18 +257,16 @@ def offload_cache(
         return dv
 
     t0 = time.perf_counter()
-    for leaf in jax.tree.leaves(cache):
-        dt = getattr(leaf, "dtype", None)
-        # jnp.issubdtype, not numpy dtype.kind: bfloat16 is kind 'V' to numpy
-        if dt is None or not jnp.issubdtype(dt, jnp.floating) or leaf.size < 1024:
+    for arr, src_name, src_itemsize in _iter_kv_leaves(cache):
+        if arr is None:
+            n_skipped += 1
             continue
-        a = np.asarray(jnp.asarray(leaf, jnp.float32))
-        arr = np.ascontiguousarray(a.reshape(a.shape[0], -1) if a.ndim > 1 else a)
         tl = time.perf_counter()
         if quality is not None:
             res = quality.compress(arr)
             n_out += len(res.blob)
-            worst_psnr = min(worst_psnr, res.meta["quality"]["achieved_psnr"])
+            psnr = res.meta["quality"]["achieved_psnr"]
+            worst_psnr = psnr if worst_psnr is None else min(worst_psnr, psnr)
             if verify:
                 t_verify += _verify_frame(res.blob)
                 n_frames += 1
@@ -238,27 +283,111 @@ def offload_cache(
         telemetry.metric_observe(
             "sz3_offload_leaf_seconds", time.perf_counter() - tl
         )
-        n_in += arr.nbytes
+        # source-dtype bytes: eviction frees the leaf AT REST (bf16 = 2
+        # B/elem), not the float32 working copy the compressor consumed —
+        # counting arr.nbytes inflated bf16 ratios ~2x
+        n_in += arr.size * src_itemsize
+        src_dtypes.add(src_name)
         n_leaves += 1
     dt = time.perf_counter() - t0
     telemetry.metric_count("sz3_offload_leaves_total", n_leaves)
+    if n_skipped:
+        telemetry.metric_count("sz3_offload_leaves_skipped_total", n_skipped)
     telemetry.metric_count("sz3_offload_bytes_in_total", n_in)
     telemetry.metric_count("sz3_offload_bytes_out_total", n_out)
     fields = dict(
         leaves=n_leaves,
+        skipped=n_skipped,
+        src_dtype=",".join(sorted(src_dtypes)) if src_dtypes else None,
         ratio=n_in / max(1, n_out),
         MB_per_s=n_in / 1e6 / max(dt, 1e-9),
     )
     if verify:
         fields.update(verified_frames=n_frames, verify_seconds=t_verify)
     if quality is not None:
+        psnr_field = (
+            {} if worst_psnr is None else {"worst_leaf_psnr_db": worst_psnr}
+        )
         log.info(
             "kv_offload", mode="quality", target_psnr_db=target_psnr,
-            worst_leaf_psnr_db=worst_psnr, **fields,
+            **psnr_field, **fields,
         )
     else:
         log.info("kv_offload", mode="chunked_stream", rel_eb=eb, **fields)
     return n_in, n_out
+
+
+def offload_cache_async(
+    cache,
+    eb: float = 1e-3,
+    chunk_bytes: int = 1 << 20,
+    workers: int = 4,
+    candidates=None,
+    verify: bool = True,
+    executor: str = "thread",
+):
+    """Offload every qualifying cache leaf through the async service.
+
+    Leaves become pages of one ``kv`` tenant and compress concurrently on
+    the service's worker pool; with ``verify`` each page's chunk 0 is
+    fetched back through the coalescing read path (strict per-chunk CRC
+    validation) before the bytes count as evicted.  Accounting matches
+    :func:`offload_cache`: source-dtype bytes in, container bytes out.
+    """
+    import asyncio
+
+    from repro.core import ErrorBoundMode
+    from repro.serve.offload import OffloadService
+
+    async def _run():
+        svc = OffloadService(
+            workers=workers,
+            executor=executor,
+            eb=eb,
+            mode=ErrorBoundMode.REL,
+            candidates=candidates,
+            chunk_bytes=chunk_bytes,
+            verify="strict" if verify else "off",
+        )
+        n_in = n_out = n_leaves = n_skipped = 0
+        src_dtypes = set()
+        t0 = time.perf_counter()
+        try:
+            puts = []
+            for i, (arr, src_name, src_itemsize) in enumerate(
+                _iter_kv_leaves(cache)
+            ):
+                if arr is None:
+                    n_skipped += 1
+                    continue
+                n_in += arr.size * src_itemsize
+                src_dtypes.add(src_name)
+                puts.append(svc.put("kv", f"leaf{i}", arr))
+            reports = await asyncio.gather(*puts)
+            n_leaves = len(reports)
+            n_out = sum(r["n_out"] for r in reports)
+            if verify:
+                await asyncio.gather(
+                    *[svc.fetch("kv", r["page"], 0) for r in reports]
+                )
+        finally:
+            await svc.close()
+        dt = time.perf_counter() - t0
+        telemetry.metric_count("sz3_offload_leaves_total", n_leaves)
+        if n_skipped:
+            telemetry.metric_count("sz3_offload_leaves_skipped_total", n_skipped)
+        telemetry.metric_count("sz3_offload_bytes_in_total", n_in)
+        telemetry.metric_count("sz3_offload_bytes_out_total", n_out)
+        log.info(
+            "kv_offload", mode="async_service", rel_eb=eb, leaves=n_leaves,
+            skipped=n_skipped,
+            src_dtype=",".join(sorted(src_dtypes)) if src_dtypes else None,
+            ratio=n_in / max(1, n_out), MB_per_s=n_in / 1e6 / max(dt, 1e-9),
+            workers=workers, executor=executor,
+        )
+        return n_in, n_out
+
+    return asyncio.run(_run())
 
 
 if __name__ == "__main__":

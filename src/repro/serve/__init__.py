@@ -1,0 +1,19 @@
+"""Serving layer: jitted decode steps (:mod:`.step`, needs jax) and the
+async multi-tenant KV-offload service (:mod:`.offload`, numpy-only).
+
+Only the offload service is imported eagerly — ``step`` pulls the model
+stack and is imported by the launchers that need it.
+"""
+from .offload import (  # noqa: F401
+    DecodeStateCache,
+    OffloadError,
+    OffloadService,
+    blob_key,
+)
+
+__all__ = [
+    "DecodeStateCache",
+    "OffloadError",
+    "OffloadService",
+    "blob_key",
+]
