@@ -523,6 +523,114 @@ def telemetry_rows(full: bool = False, seed: int = 3, trace_path=None):
     return out
 
 
+def grad_rows(full: bool = False, seed: int = 3):
+    """In-training gradient compression (PR10 acceptance): the jit codec
+    facade's encode/decode throughput on a gradient-sized array, the
+    per-block bound verified pointwise, the error-feedback time-average
+    error (the unbiasedness the >=20-step trajectory test relies on), and
+    the collective-bytes model of the compressed DP reduction — the int8
+    schedule must cut reduction bytes >= 1.3x vs a bf16 all-reduce.  All
+    data-deterministic (fixed seed), so check_regression.py gates them as
+    absolute criteria."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compression.grad import collective_bytes
+    from repro.core import jitmode
+
+    n = (1 << 23) if full else (1 << 21)
+    rng = np.random.default_rng(seed)
+    # gradient-like: smooth layer structure times heavy-tailed magnitudes
+    g = (
+        np.cumsum(rng.standard_normal(n).astype(np.float32)) * 1e-3
+        + rng.standard_normal(n).astype(np.float32)
+    ).astype(np.float32)
+    mb = g.nbytes / 1e6
+    pol = jitmode.JitPolicy.parse("int8:bs=512")
+    enc = jax.jit(jitmode.encode, static_argnums=1)
+    dec = jax.jit(jitmode.decode)
+    gj = jnp.asarray(g)
+    c = enc(gj, pol)  # compile
+    _ = dec(c).block_until_ready()
+    t_enc, c = _best(
+        lambda: jax.block_until_ready(enc(gj, pol)), repeats=3,
+        label="grad_encode",
+    )
+    t_dec, back = _best(
+        lambda: dec(c).block_until_ready(), repeats=3, label="grad_decode"
+    )
+    back = np.asarray(back)
+    bound = np.repeat(np.asarray(c.bound()), pol.bs)[:n]
+    bound_ok = float(np.all(np.abs(back - g) <= bound))
+    # error feedback: the time-average of dequantized grads must converge
+    # to the true gradient (what keeps compressed/uncompressed trajectories
+    # close) — measured on a slice so the loop stays cheap
+    gs = jnp.asarray(g[: 1 << 16])
+    fb = jnp.zeros_like(gs)
+    acc = np.zeros(gs.shape, np.float64)
+    steps = 30
+    for _ in range(steps):
+        d = dec(enc(gs + fb, pol))
+        fb = gs + fb - d
+        acc += np.asarray(d, np.float64)
+    fb_err = float(np.abs(acc / steps - np.asarray(gs, np.float64)).max())
+    acc8 = collective_bytes(n, dp=8, policy=8)
+    acc4 = collective_bytes(n, dp=8, policy=4)
+    return {
+        "n": n,
+        "data_MB": round(mb, 1),
+        "policy": "int8:bs=512",
+        "encode_MBps": round(mb / t_enc, 1),
+        "decode_MBps": round(mb / t_dec, 1),
+        "bound_ok": bound_ok,
+        "feedback_avg_err": fb_err,
+        "collective_cut_int8": round(acc8["cut_vs_bf16_allreduce"], 3),
+        "collective_cut_int4": round(acc4["cut_vs_bf16_allreduce"], 3),
+    }
+
+
+def elastic_rows(full: bool = False, seed: int = 3):
+    """Elastic chunk-range restore (PR10 acceptance): reading a quarter of a
+    big lossy checkpoint leaf through ``ChunkRangeReader`` must decode
+    strictly fewer container bytes than the full leaf and reproduce the full
+    decode's rows exactly (the reshard differential).  Byte fractions are
+    data-deterministic; the MB/s rows are informational."""
+    from repro.ft.checkpoint import LeafPolicy, decode_leaf, encode_leaf
+    from repro.ft.elastic import ChunkRangeReader
+
+    rows = 8192 if full else 4096
+    rng = np.random.default_rng(seed)
+    leaf = (
+        np.cumsum(rng.standard_normal((rows, 512)).astype(np.float32), 0)
+        * 1e-3
+    )
+    mb = leaf.nbytes / 1e6
+    t_enc, (blob, meta) = _best(
+        lambda: encode_leaf(leaf, LeafPolicy("lossy", 1e-4)), repeats=1
+    )
+    assert meta["codec"] in ("sz3_auto_rel", "sz3_chunked_rel"), meta["codec"]
+    t_full, host = _best(
+        lambda: decode_leaf(blob, meta), repeats=2, label="elastic_full_decode"
+    )
+    q = rows // 4
+
+    def quarter():
+        r = ChunkRangeReader(blob)
+        return r, r.rows(0, q)
+
+    t_qr, (reader, got) = _best(quarter, repeats=2, label="elastic_quarter")
+    exact = float(np.array_equal(got, host.reshape(rows, -1)[:q]))
+    return {
+        "leaf_MB": round(mb, 1),
+        "codec": meta["codec"],
+        "container_bytes": len(blob),
+        "quarter_read_frac": round(reader.bytes_read / len(blob), 3),
+        "range_values_exact": exact,
+        "full_decode_MBps": round(mb / t_full, 1),
+        "quarter_decode_MBps": round(mb / 4 / t_qr, 1),
+    }
+
+
 def perf_rows(full: bool = False, trace_path=None):
     from .bench_serving import serving_rows  # lazy: avoids a module cycle
 
@@ -536,6 +644,8 @@ def perf_rows(full: bool = False, trace_path=None):
         "hybrid": hybrid_rows(full),
         "fast": fast_rows(full),
         "integrity": integrity_rows(full),
+        "grad": grad_rows(full),
+        "elastic": elastic_rows(full),
         "telemetry": telemetry_rows(full, trace_path=trace_path),
         "serving": serving_rows(full),
         "timing_percentiles": timing_percentiles(),

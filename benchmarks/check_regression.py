@@ -148,6 +148,40 @@ QUALITY_GATES = [
         "telemetry traced-path overhead < 5% (fast tier)",
         lambda v, perf: v < 5.0,
     ),
+    # in-training compression (PR10): the compressed DP reduction schedule
+    # must cut collective bytes >= 1.3x vs a bf16 all-reduce at int8 (the
+    # byte model is exact arithmetic — machine-independent), the jit codec's
+    # per-block bound must hold pointwise on the gradient fixture, and error
+    # feedback must keep the time-averaged dequantized gradient within 1% of
+    # the true one (what the >=20-step trajectory parity rests on)
+    (
+        ("grad", "collective_cut_int8"),
+        "compressed DP reduction cuts collective bytes >= 1.3x at int8",
+        lambda v, perf: v >= 1.3,
+    ),
+    (
+        ("grad", "bound_ok"),
+        "jit codec per-block bound holds pointwise on gradient fixture",
+        lambda v, perf: v >= 1.0,
+    ),
+    (
+        ("grad", "feedback_avg_err"),
+        "error-feedback time-average gradient error < 0.01",
+        lambda v, perf: v < 0.01,
+    ),
+    # elastic chunk-range restore (PR10): a quarter-leaf read must decode
+    # well under the full container (strictly fewer bytes with margin) and
+    # match the full decode's rows exactly
+    (
+        ("elastic", "quarter_read_frac"),
+        "chunk-range quarter read decodes < 60% of container bytes",
+        lambda v, perf: v < 0.6,
+    ),
+    (
+        ("elastic", "range_values_exact"),
+        "chunk-range rows identical to full decode",
+        lambda v, perf: v >= 1.0,
+    ),
     # serving layer (PR9): the decode-state cache must buy >= 5x p99 latency
     # on repeated random-access chunk fetches vs the uncached path (both
     # timed in the same run on the same machine — machine-independent), the

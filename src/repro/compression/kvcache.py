@@ -44,3 +44,61 @@ def quantization_snr_db(x: jnp.ndarray) -> float:
     p_sig = jnp.mean(x.astype(jnp.float32) ** 2)
     p_err = jnp.maximum(jnp.mean(err**2), 1e-30)
     return float(10.0 * jnp.log10(p_sig / p_err))
+
+
+# -- jit-tier prefill compression (core/jitmode facade) ----------------------
+#
+# Bulk prompt-KV quantization through the same per-block predictor contest
+# the gradient and moment paths use: each token's (hd,) vector is one block
+# (bs = hd padded), so the per-token bound contract matches quantize_tokens
+# but head vectors with structure (near-constant heads, smooth RoPE bands)
+# get the Lorenzo/mean predictors' tighter scales for free.
+
+import dataclasses as _dataclasses
+from functools import partial as _partial
+
+from ..core import jitmode as _jitmode
+from ..core.jitmode import JitPolicy
+
+
+@_partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["codes", "scale", "tags", "base"],
+    meta_fields=["orig_hd", "bits"],
+)
+@_dataclasses.dataclass
+class PrefillCodes:
+    codes: jnp.ndarray  # (..., nb, bs) int8 / packed uint8
+    scale: jnp.ndarray  # (..., nb) f32
+    tags: jnp.ndarray  # (..., nb) uint8
+    base: jnp.ndarray  # (..., nb) f32
+    orig_hd: int
+    bits: int
+
+    def bound(self) -> jnp.ndarray:
+        """Per-block bound, same contract as BlockCodes.bound()."""
+        mag = _jitmode._sel_magnitude(self.codes, self.tags, self.bits)
+        slack = (jnp.abs(self.base) + self.scale * mag) * jnp.float32(2.0**-22)
+        return self.scale * 0.5 + slack
+
+
+def prefill_policy(hd: int, bits: int = 8) -> JitPolicy:
+    """One block per token vector (hd rounded up to even for int4)."""
+    bs = hd + (hd % 2)
+    return JitPolicy(tier=f"int{bits}", bs=bs)
+
+
+def quantize_prefill(x: jnp.ndarray, policy: Optional[JitPolicy] = None) -> PrefillCodes:
+    """x: (..., hd) bulk prompt KV -> per-token jit-tier codes."""
+    pol = policy or prefill_policy(x.shape[-1])
+    codes, scale, tags, base, last = _jitmode.encode_lastaxis(x, pol)
+    return PrefillCodes(
+        codes=codes, scale=scale, tags=tags, base=base,
+        orig_hd=last, bits=pol.bits,
+    )
+
+
+def dequantize_prefill(c: PrefillCodes) -> jnp.ndarray:
+    return _jitmode.decode_lastaxis(
+        c.codes, c.scale, c.tags, c.base, c.orig_hd, c.bits
+    )

@@ -1,63 +1,121 @@
-"""Error-bounded 8-bit optimizer-moment compression (paper quantizer, fixed
-radius 127, per-block scales along the last axis).
+"""Error-bounded optimizer-moment compression via the jit codec facade.
 
-The value-range-relative error bound per block is scale/2 = absmax/254 —
-i.e. the paper's REL mode with eb ~= 0.2%.  Codes keep the parameter's shape
-(so parameter PartitionSpecs apply unchanged); scales drop the last dim to
-ceil(last/BLOCK) blocks.
+Moments are encoded with ``core/jitmode``'s fixed tier blocked along the
+last axis: per-block predictor contest (zero / Lorenzo-1 / mean), fixed
+radius, mantissa-snapped per-block scales.  The value-range-relative bound
+per block is ``scale/2`` (REL mode, eb ~= 0.2-0.8% of the block range at
+int8).  Codes keep the parameter's shape (last dim padded to the block
+size) so parameter PartitionSpecs apply unchanged; the side channels
+(scale, tag, base) drop the last dim to ``ceil(last/BLOCK)`` blocks and
+shard like the scale always has (``train/step.py`` maps any trailing
+``codes``/``scale``/``tags``/``base`` path name to the parameter's spec).
+
+Two bound domains:
+
+* ``compress``/``decompress`` — linear values, per-block REL bound.  Right
+  for the first moment (signed; its error is a small fraction of the
+  block's gradient scale, which is the same regime as gradient noise).
+* ``compress_nonneg``/``decompress_nonneg`` — the SECOND moment.  A block
+  REL bound is catastrophic for ``v``: a small element in a block with a
+  large absmax quantizes to code 0, its history is erased every step, and
+  ``m/sqrt(v)`` blows up (the collapse is chaotic — whether a given run
+  diverges depends on float noise).  Instead the value is compressed in
+  the log2 domain, the classic SZ pointwise-relative (PW_REL) construction:
+  an ABS bound of d on ``log2 v`` is the multiplicative bound
+  ``v_hat/v in [2**-d, 2**d]``, so small ``v`` keeps its magnitude and the
+  preconditioner stays bounded.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..core import jitmode
+from ..core.jitmode import JitPolicy
+
 BLOCK = 256
-SCALE_FLOOR = 1e-12
+SCALE_FLOOR = jitmode.SCALE_FLOOR
+
+DEFAULT_POLICY = JitPolicy(tier="int8", bs=BLOCK)
+
+
+#: Floor for log-domain compression.  Must be comfortably NORMAL in f32 —
+#: XLA-CPU flushes subnormal constants to zero and log2(0) = -inf poisons
+#: the block stats.  sqrt(2**-100) ~= 9e-16 is far below Adam's eps.
+NONNEG_FLOOR = float(2.0 ** -100)
 
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["codes", "scale"],
-    meta_fields=["orig_last"],
+    data_fields=["codes", "scale", "tags", "base"],
+    meta_fields=["orig_last", "bits", "domain"],
 )
 @dataclasses.dataclass
 class Compressed:
-    codes: jnp.ndarray  # int8, shape = param shape (last dim padded)
+    codes: jnp.ndarray  # int8 (param shape, last dim padded) / uint8 packed
     scale: jnp.ndarray  # f32, (*lead, n_blocks)
+    tags: jnp.ndarray  # uint8, (*lead, n_blocks) — winning predictor
+    base: jnp.ndarray  # f32, (*lead, n_blocks) — predictor base value
     orig_last: int
+    bits: int = 8
+    domain: str = "linear"  # "linear" | "log2" (nonneg PW_REL)
 
 
-def compress(x: jnp.ndarray) -> Compressed:
+def compress(x: jnp.ndarray, policy: Optional[JitPolicy] = None) -> Compressed:
+    pol = policy or DEFAULT_POLICY
     x = x.astype(jnp.float32)
     if x.ndim == 0:
         x = x.reshape(1)
-    last = x.shape[-1]
-    pad = (-last) % BLOCK
-    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    nb = xp.shape[-1] // BLOCK
-    blocks = xp.reshape(xp.shape[:-1] + (nb, BLOCK))
-    absmax = jnp.max(jnp.abs(blocks), axis=-1)
-    scale = jnp.maximum(absmax / 127.0, SCALE_FLOOR)
-    q = jnp.clip(jnp.rint(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
-    return Compressed(codes=q.reshape(xp.shape), scale=scale, orig_last=last)
+    codes, scale, tags, base, last = jitmode.encode_lastaxis(x, pol)
+    flat_codes = codes.reshape(codes.shape[:-2] + (-1,))
+    return Compressed(
+        codes=flat_codes, scale=scale, tags=tags, base=base,
+        orig_last=last, bits=pol.bits,
+    )
 
 
 def decompress(c: Compressed) -> jnp.ndarray:
     shp = c.codes.shape
-    nb = shp[-1] // BLOCK
-    blocks = c.codes.reshape(shp[:-1] + (nb, BLOCK)).astype(jnp.float32)
-    x = blocks * c.scale[..., None]
-    return x.reshape(shp)[..., : c.orig_last]
+    nb = c.scale.shape[-1]
+    blocks = c.codes.reshape(shp[:-1] + (nb, shp[-1] // nb))
+    x = jitmode.decode_lastaxis(
+        blocks, c.scale, c.tags, c.base, c.orig_last, c.bits
+    )
+    if c.domain == "log2":
+        x = jnp.exp2(x)
+        # values that were at the floor (incl. exact zeros) decode back to 0
+        x = jnp.where(x <= 2.0 * NONNEG_FLOOR, 0.0, x)
+    return x
 
 
-def init_compressed(p: jnp.ndarray) -> Compressed:
-    return compress(jnp.zeros(p.shape if p.ndim else (1,), jnp.float32))
+def compress_nonneg(
+    x: jnp.ndarray, policy: Optional[JitPolicy] = None
+) -> Compressed:
+    """Pointwise-relative compression of a nonnegative array (log2 domain)."""
+    u = jnp.log2(jnp.maximum(x.astype(jnp.float32), NONNEG_FLOOR))
+    c = compress(u, policy)
+    return dataclasses.replace(c, domain="log2")
 
 
-def compression_ratio(p: jnp.ndarray) -> float:
+def decompress_nonneg(c: Compressed) -> jnp.ndarray:
+    return decompress(c)
+
+
+def init_compressed(
+    p: jnp.ndarray, policy: Optional[JitPolicy] = None, domain: str = "linear"
+) -> Compressed:
+    zeros = jnp.zeros(p.shape if p.ndim else (1,), jnp.float32)
+    if domain == "log2":
+        return compress_nonneg(zeros, policy)
+    return compress(zeros, policy)
+
+
+def compression_ratio(p: jnp.ndarray, policy: Optional[JitPolicy] = None) -> float:
     """Memory saving vs f32 moments."""
-    c = init_compressed(p)
-    return (p.size * 4) / (c.codes.size + c.scale.size * 4)
+    c = init_compressed(p, policy)
+    packed = c.codes.size + c.scale.size * 4 + c.tags.size + c.base.size * 4
+    return (p.size * 4) / packed

@@ -5,15 +5,29 @@ restart is: pick the best mesh for the survivors -> rebuild plan/specs ->
 device_put each leaf with its new NamedSharding.  Data-pipeline determinism
 (repro/data) makes the restart bit-reproducible modulo DP-width-dependent
 reduction order.
+
+``restore_resharded`` goes one step further for LARGE lossy leaves: the
+checkpoint's chunked v2/v4 containers are random-access along the leading
+axis (``core.chunking.parse_chunked_index`` / ``decompress_chunk``), so a
+device that owns rows ``[r0, r1)`` of a leaf under the NEW mesh decodes only
+the chunks overlapping that row range instead of materializing the whole
+leaf on every host.  On a changed mesh this turns restore I/O per host from
+O(leaf) into O(shard) for the optimizer moments and feedback — the leaves
+that dominate checkpoint bytes.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
-from typing import Dict, Optional, Tuple
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from ..core.chunking import ChunkedIndex, decompress_chunk, parse_chunked_index
 from ..models.common import ModelConfig
 from ..parallel.plan import ParallelPlan
 
@@ -69,6 +83,187 @@ def reshard_state(host_state, spec_tree, mesh):
         put, host_state, spec_tree,
         is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
     )
+
+
+# ---------------------------------------------------------------------------
+# chunk-range restore: decode only the chunks a shard needs
+# ---------------------------------------------------------------------------
+
+#: codecs whose blobs are v2/v4 multi-chunk containers (random-access rows)
+_CHUNKED_CODECS = ("sz3_auto_rel", "sz3_chunked_rel", "sz3_psnr")
+
+
+@dataclasses.dataclass
+class LeafFetch:
+    """Byte accounting for one leaf's resharded restore."""
+
+    mode: str  # "chunk-range" | "full"
+    bytes_read: int  # container bytes actually decoded
+    bytes_full: int  # what a full-leaf decode would have read
+
+
+@dataclasses.dataclass
+class ReshardReport:
+    step: int
+    leaves: Dict[str, LeafFetch] = dataclasses.field(default_factory=dict)
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(f.bytes_read for f in self.leaves.values())
+
+    @property
+    def bytes_full(self) -> int:
+        return sum(f.bytes_full for f in self.leaves.values())
+
+    def summary(self) -> str:
+        n_rng = sum(1 for f in self.leaves.values() if f.mode == "chunk-range")
+        return (
+            f"reshard restore step {self.step}: {n_rng}/{len(self.leaves)} "
+            f"leaves by chunk range, {self.bytes_read}/{self.bytes_full} "
+            "container bytes decoded"
+        )
+
+
+class ChunkRangeReader:
+    """Row-range reads over one chunked container, decoded chunks memoized.
+
+    Chunk ``i`` covers rows ``[row_starts[i], row_starts[i+1])`` of the
+    leaf's leading axis (the checkpoint writer chunks ``leaf.reshape(
+    shape[0], -1)`` along axis 0).  Replicated mesh axes re-request the same
+    rows from several devices; the memo makes those free.
+    """
+
+    def __init__(self, blob: bytes, index: Optional[ChunkedIndex] = None):
+        self.blob = blob
+        self.index = index or parse_chunked_index(blob)
+        self._decoded: Dict[int, np.ndarray] = {}
+        self.bytes_read = self.index.body_off  # header always parsed
+        starts = [0]
+        for c in self.index.header["chunks"]:
+            starts.append(starts[-1] + int(c["n0"]))
+        self.row_starts = starts
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_starts[-1]
+
+    def _chunk(self, i: int) -> np.ndarray:
+        if i not in self._decoded:
+            self._decoded[i] = np.asarray(
+                decompress_chunk(self.blob, i, parsed=self.index)
+            )
+            self.bytes_read += self.index.bounds[i][1]
+        return self._decoded[i]
+
+    def rows(self, r0: int, r1: int) -> np.ndarray:
+        """Rows ``[r0, r1)`` of the stored flat2d array."""
+        if not 0 <= r0 <= r1 <= self.n_rows:
+            raise IndexError(f"rows [{r0}, {r1}) outside [0, {self.n_rows})")
+        parts = []
+        for i in range(len(self.index.bounds)):
+            c0, c1 = self.row_starts[i], self.row_starts[i + 1]
+            if c1 <= r0 or c0 >= r1:
+                continue
+            part = self._chunk(i)
+            part2d = part.reshape(part.shape[0] if part.ndim else part.size, -1)
+            parts.append(part2d[max(r0 - c0, 0) : r1 - c0])
+        return np.concatenate(parts, axis=0) if parts else np.empty((0, 1))
+
+
+def _axis0_only(spec: PartitionSpec, ndim: int) -> bool:
+    """True when the spec shards (at most) the leading dim."""
+    entries = tuple(spec)
+    return all(e is None for e in entries[1:])
+
+
+def restore_leaf_resharded(
+    blob: bytes,
+    meta: Dict[str, Any],
+    sharding: NamedSharding,
+) -> Tuple[jax.Array, LeafFetch]:
+    """Build a sharded jax.Array for one checkpoint leaf, decoding only the
+    chunks each addressable shard overlaps when the container allows it."""
+    shape = tuple(meta["shape"])
+    dtype = np.dtype(meta["dtype"])
+    spec = sharding.spec
+    if (
+        meta.get("codec") in _CHUNKED_CODECS
+        and len(shape) >= 1
+        and _axis0_only(spec, len(shape))
+    ):
+        try:
+            reader = ChunkRangeReader(blob)
+        except Exception:
+            reader = None
+        if reader is not None and reader.n_rows == (shape[0] if shape else 1):
+            inner = shape[1:]
+
+            def fetch(idx) -> np.ndarray:
+                sl = idx[0] if idx else slice(None)
+                r0, r1, _ = sl.indices(shape[0])
+                rows = reader.rows(r0, r1)
+                return rows.reshape((r1 - r0,) + inner).astype(dtype)
+
+            arr = jax.make_array_from_callback(shape, sharding, fetch)
+            return arr, LeafFetch("chunk-range", reader.bytes_read, len(blob))
+    # fallback: decode the full leaf, device_put with the new sharding
+    from .checkpoint import decode_leaf
+
+    host = decode_leaf(blob, meta)
+    return jax.device_put(host, sharding), LeafFetch("full", len(blob), len(blob))
+
+
+def restore_resharded(
+    mgr,
+    template,
+    spec_tree,
+    mesh,
+    step: Optional[int] = None,
+) -> Tuple[Any, Dict[str, Any], ReshardReport]:
+    """Restore checkpoint ``step`` from ``mgr`` directly onto ``mesh``.
+
+    ``template`` fixes the pytree structure (``jax.eval_shape`` output is
+    fine); ``spec_tree`` gives each leaf's PartitionSpec on the NEW mesh
+    (missing/non-spec entries mean replicated).  Large lossy leaves restore
+    by chunk range — each host decodes only the rows its devices own —
+    everything else takes the decode-then-device_put path.  Returns
+    ``(state, extra, ReshardReport)``.
+    """
+    from .checkpoint import _path_str
+
+    steps = mgr.list_steps()
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {mgr.dir}")
+    step = steps[-1] if step is None else step
+    d = Path(mgr.dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves = manifest["leaves"]
+
+    flat_spec = {
+        _path_str(p): s
+        for p, s in jax.tree_util.tree_flatten_with_path(
+            spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec)
+        )[0]
+    }
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    report = ReshardReport(step=int(step))
+    out = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        if pstr not in leaves:
+            raise KeyError(f"leaf {pstr} missing from checkpoint {step}")
+        meta = leaves[pstr]
+        blob = (d / meta["file"]).read_bytes()
+        spec = flat_spec.get(pstr)
+        if not isinstance(spec, PartitionSpec):
+            spec = PartitionSpec()
+        arr, fetch = restore_leaf_resharded(
+            blob, meta, NamedSharding(mesh, spec)
+        )
+        report.leaves[pstr] = fetch
+        out.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    return state, manifest.get("extra", {}), report
 
 
 def validate_divisibility(cfg: ModelConfig, plan: ParallelPlan) -> Dict[str, bool]:

@@ -35,11 +35,42 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--compress-moments", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="mesh shape as data=N[,model=M]; needs that many "
+                         "devices (XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=K simulates K on CPU)")
+    ap.add_argument("--compress-grads", default="", metavar="POLICY",
+                    help="error-bounded DP gradient reduction: a jitmode "
+                         "policy spec ('int8', 'int4:bs=256', "
+                         "'int8:eb=1e-6:pred=zero+lorenzo1+mean') or plain "
+                         "8/4; needs --mesh with data>1")
+    ap.add_argument("--compress-opt", default="", metavar="POLICY",
+                    help="compressed optimizer moments with this jitmode "
+                         "policy spec (implies --compress-moments)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    plan = ParallelPlan(microbatches=args.microbatches)
-    opt = AdamWConfig(lr=args.lr, compress_moments=args.compress_moments)
+    mesh = None
+    if args.mesh:
+        from .mesh import make_debug_mesh
+
+        pairs = [kv.split("=") for kv in args.mesh.split(",")]
+        names = tuple(k for k, _ in pairs)
+        shape = tuple(int(v) for _, v in pairs)
+        mesh = make_debug_mesh(shape, names)
+    grad_policy = args.compress_grads
+    if grad_policy in ("8", "4"):  # bare bit width -> default policy
+        grad_policy = f"int{grad_policy}"
+    plan = ParallelPlan(
+        mesh=mesh,
+        microbatches=args.microbatches,
+        grad_policy=grad_policy,
+    )
+    opt = AdamWConfig(
+        lr=args.lr,
+        compress_moments=args.compress_moments or bool(args.compress_opt),
+        moment_policy=args.compress_opt,
+    )
     print(f"arch={cfg.name} family={cfg.family} ~{cfg.n_flop_params()/1e6:.0f}M params")
 
     pipe = make_pipeline(cfg, seq=args.seq, global_batch=args.batch)

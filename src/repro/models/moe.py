@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..parallel import compat
 from ..parallel.plan import ParallelPlan
 from .common import ModelConfig
 from .layers import dense_init
@@ -142,9 +143,9 @@ def apply_moe(
                 aux = jax.lax.pmean(aux, tuple(plan.batch_axes))
             return y.reshape(xl.shape), aux
 
-        y, aux = jax.shard_map(
+        y, aux = compat.shard_map(
             shard_fn,
-            mesh=plan.smap_mesh(),
+            plan.smap_mesh(),
             axis_names=manual,
             in_specs=(
                 jax.sharding.PartitionSpec(bspec, None, None),

@@ -23,18 +23,33 @@ class AdamWConfig(NamedTuple):
     eps: float = 1e-8
     weight_decay: float = 0.1
     grad_clip: float = 1.0
-    compress_moments: bool = False  # int8 blockwise (paper technique)
+    compress_moments: bool = False  # blockwise jit-codec moments
+    moment_policy: str = ""  # jitmode policy spec, e.g. "int8:bs=256";
+    # empty = opt_state.DEFAULT_POLICY
+
+
+def _moment_policy(cfg: "AdamWConfig"):
+    if cfg.moment_policy:
+        return oc.JitPolicy.parse(cfg.moment_policy)
+    return None
 
 
 def init_state(params, cfg: AdamWConfig):
-    def zeros_like_compressed(p):
-        if cfg.compress_moments:
-            return oc.init_compressed(p)
-        return jnp.zeros_like(p, jnp.float32)
+    pol = _moment_policy(cfg)
+
+    def zeros_like_compressed(domain):
+        def init(p):
+            if cfg.compress_moments:
+                return oc.init_compressed(p, pol, domain=domain)
+            return jnp.zeros_like(p, jnp.float32)
+
+        return init
 
     return {
-        "m": jax.tree.map(zeros_like_compressed, params),
-        "v": jax.tree.map(zeros_like_compressed, params),
+        # m linear (signed, block-REL bound); v in log2 domain — a block-REL
+        # bound on v lets small entries collapse to 0 and m/sqrt(v) diverge
+        "m": jax.tree.map(zeros_like_compressed("linear"), params),
+        "v": jax.tree.map(zeros_like_compressed("log2"), params),
         "step": jnp.zeros((), jnp.int32),
     }
 
@@ -54,11 +69,15 @@ def update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
     lr = cfg.lr * lr_scale
+    pol = _moment_policy(cfg)
 
     def upd(p, g, m, v):
         g = g.astype(jnp.float32) * clip
         m_f = oc.decompress(m) if cfg.compress_moments else m
         v_f = oc.decompress(v) if cfg.compress_moments else v
+        # v is a variance: block quantization error within the bound can
+        # push small entries below zero, which sqrt would turn into NaN
+        v_f = jnp.maximum(v_f, 0.0)
         m_new = b1 * m_f + (1 - b1) * g
         v_new = b2 * v_f + (1 - b2) * (g * g)
         mhat = m_new / bc1
@@ -68,8 +87,8 @@ def update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
         )
         p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
         if cfg.compress_moments:
-            m_new = oc.compress(m_new)
-            v_new = oc.compress(v_new)
+            m_new = oc.compress(m_new, pol)
+            v_new = oc.compress_nonneg(v_new, pol)
         return p_new, m_new, v_new
 
     flat_p, treedef = jax.tree.flatten(params)

@@ -18,6 +18,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from . import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelPlan:
@@ -30,6 +32,9 @@ class ParallelPlan:
     microbatches: int = 1  # gradient-accumulation steps
     kv_cache_dtype: str = "bf16"  # "bf16" | "int8" (paper-technique lever)
     grad_compress_bits: int = 0  # 0 = off; 8/4 = error-bounded grad quant
+    grad_policy: str = ""  # full jit-codec policy spec for the DP grad
+    # reduction (e.g. "int8:eb=1e-6:bs=512:pred=zero+lorenzo1+mean");
+    # wins over grad_compress_bits when set
     # §Perf levers (default off = paper-faithful baseline):
     bwd_cast_bf16: bool = False  # cast activation cotangents to bf16 at block
     # boundaries -> backward TP all-reduces run at half width
@@ -41,6 +46,18 @@ class ParallelPlan:
     decode_feature_shard: bool = False  # shard the feature dim over the fsdp
     # axis at decode: matmuls partial-sum tiny activations instead of
     # all-gathering the full weight shards every token (weight-stationary)
+
+    def grad_compression(self):
+        """The resolved gradient-compression JitPolicy, or None when off."""
+        if self.grad_policy:
+            from ..compression.grad import as_policy
+
+            return as_policy(self.grad_policy)
+        if self.grad_compress_bits:
+            from ..compression.grad import as_policy
+
+            return as_policy(self.grad_compress_bits)
+        return None
 
     # -- mesh facts ----------------------------------------------------------
     def axis_size(self, name: Optional[str]) -> int:
@@ -138,7 +155,7 @@ class ParallelPlan:
     def smap_mesh(self):
         """Mesh for nested shard_map: the ambient (possibly partially-manual)
         abstract mesh when inside another manual region, else the plan's."""
-        am = jax.sharding.get_abstract_mesh()
+        am = compat.get_abstract_mesh()
         if am is not None and not getattr(am, "empty", True):
             return am
         return self.mesh
@@ -174,9 +191,9 @@ class ParallelPlan:
 
         in_h = P(*((self.b,) + (None,) * (nd - 2) + (m,)))
         out = P(*((self.b,) + (None,) * (nd - 1)))
-        return jax.shard_map(
+        return compat.shard_map(
             f,
-            mesh=self.smap_mesh(),
+            self.smap_mesh(),
             axis_names=manual,
             in_specs=(in_h, P(m, None)),
             out_specs=out,

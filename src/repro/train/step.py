@@ -3,10 +3,15 @@ error-bounded gradient compression on the DP reduction.
 
 Two modes:
   * baseline  — plain pjit: XLA inserts the DP all-reduce (bf16/f32).
-  * compressed (plan.grad_compress_bits in {8,4}) — the step body runs inside
-    a shard_map that is MANUAL over the DP axes (model axis stays auto), so
-    the DP reduction is OUR schedule: reduce-scatter bf16 -> error-feedback
-    quantize -> all-gather int8/int4 (repro/compression/grad.py).
+  * compressed (plan.grad_policy / plan.grad_compress_bits) — the step body
+    runs inside a shard_map that is MANUAL over ALL mesh axes, so the DP
+    reduction is OUR schedule: reduce-scatter bf16 -> error-feedback encode
+    with the jit codec facade (per-block predictor contest, core/jitmode) ->
+    all-gather codes + side channels (repro/compression/grad.py).  Full
+    manual (not dp-only) both sidesteps an XLA-CPU partial-manual
+    partitioner crash (parallel/compat.py) and keeps model compute purely
+    local — params are replicated inside the region, so the model axis just
+    duplicates work on CPU test meshes.
 
 State = {params, opt{m,v,step}, feedback?}.  All specs are derived from
 parallel/specs.py so launch/dryrun.py and examples share one source of truth.
@@ -25,15 +30,21 @@ from .. import models
 from ..compression import grad as gradc
 from ..models.common import ModelConfig
 from ..optim import AdamWConfig, init_state, update, warmup_cosine
+from ..parallel import compat
 from ..parallel.plan import ParallelPlan
 from ..parallel.specs import batch_specs, param_specs
+
+#: Compressed-moment side channels: trailing path names with the parameter's
+#: leading spec and an unsharded blocks dim (codes keeps the full rank)
+_SIDE_CHANNELS = ("scale", "tags", "base")
 
 
 def _moment_spec(pspec: P, leaf_ndim: int, compressed: bool):
     if not compressed:
         return pspec
     entries = tuple(pspec) + (None,) * (leaf_ndim - len(tuple(pspec)))
-    return {"codes": P(*entries), "scale": P(*entries[:-1], None)}
+    side = P(*entries[:-1], None)
+    return {"codes": P(*entries), **{k: side for k in _SIDE_CHANNELS}}
 
 
 def state_specs(state, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfig):
@@ -49,9 +60,9 @@ def state_specs(state, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfi
 
         def leaf_spec(path, leaf):
             names = [_key(p) for p in path]
-            # strip trailing 'codes'/'scale' for Compressed leaves; both have
-            # the parameter's rank (scale swaps the last dim for n_blocks)
-            if names and names[-1] in ("codes", "scale"):
+            # strip trailing Compressed field names; all have the parameter's
+            # rank (side channels swap the last dim for n_blocks)
+            if names and names[-1] in ("codes",) + _SIDE_CHANNELS:
                 pstr = "/".join(names[:-1])
                 base = flat_pspecs.get(pstr, P())
                 nd = leaf.ndim
@@ -64,15 +75,24 @@ def state_specs(state, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfi
 
         return jax.tree_util.tree_map_with_path(leaf_spec, moments)
 
-    specs = {
-        "params": pspecs,
-        "opt": {
-            "m": moment_tree(state["opt"]["m"]),
-            "v": moment_tree(state["opt"]["v"]),
-            "step": P(),
-        },
-    }
-    if plan.grad_compress_bits:
+    if plan.grad_compression() is not None and plan.mesh is not None:
+        # compressed mode: the step body is manual over the whole mesh with
+        # params/opt replicated inside (no FSDP there) — the AOT shardings
+        # must match the region's view or jit inserts reshards every step
+        specs = {
+            "params": jax.tree.map(lambda _: P(), state["params"]),
+            "opt": jax.tree.map(lambda _: P(), state["opt"]),
+        }
+    else:
+        specs = {
+            "params": pspecs,
+            "opt": {
+                "m": moment_tree(state["opt"]["m"]),
+                "v": moment_tree(state["opt"]["v"]),
+                "step": P(),
+            },
+        }
+    if plan.grad_compression() is not None:
         b = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
         specs["feedback"] = P(b)
     return specs
@@ -93,7 +113,7 @@ def _pstr(path) -> str:
 def init_train_state(key, cfg: ModelConfig, plan: ParallelPlan, opt_cfg: AdamWConfig):
     params = models.init_params(key, cfg, plan)
     state = {"params": params, "opt": init_state(params, opt_cfg)}
-    if plan.grad_compress_bits:
+    if plan.grad_compression() is not None:
         state["feedback"] = gradc.init_feedback(params, plan.dp)
     return state
 
@@ -133,6 +153,7 @@ def make_train_step(
         return models.loss_fn(params, batch, cfg, plan, attn_mode=attn_mode)
 
     dp_axes = tuple(plan.batch_axes)
+    grad_pol = plan.grad_compression()
 
     def step_core(state, batch, *, inner_plan: ParallelPlan):
         def lf(params, b):
@@ -146,9 +167,9 @@ def make_train_step(
             accum_dtype=jnp.dtype(plan.grad_accum_dtype),
         )
         new_state = dict(state)
-        if plan.grad_compress_bits:
+        if grad_pol is not None:
             grads, fb = gradc.compressed_reduce_tree(
-                grads, state["feedback"], dp_axes, plan.grad_compress_bits
+                grads, state["feedback"], dp_axes, grad_pol
             )
             loss = jax.lax.pmean(loss, dp_axes)
             new_state["feedback"] = fb
@@ -161,9 +182,11 @@ def make_train_step(
         metrics["loss"] = loss
         return new_state, metrics
 
-    if plan.grad_compress_bits and plan.mesh is not None:
-        # dp-manual region: batch constraints are dropped inside (local view)
-        inner_plan = dataclasses.replace(plan, batch_axes=())
+    if grad_pol is not None and plan.mesh is not None:
+        # manual over ALL mesh axes (see module docstring); the body sees
+        # purely local arrays, so the inner plan drops the mesh entirely —
+        # sharding constraints elide and model compute runs the local path
+        inner_plan = dataclasses.replace(plan, mesh=None, batch_axes=())
 
         def train_step(state, batch):
             sspecs = state_specs_cached(state)
@@ -175,10 +198,10 @@ def make_train_step(
             bspec = jax.tree.map(
                 lambda x: P(*((b,) + (None,) * (x.ndim - 1))), batch
             )
-            out = jax.shard_map(
+            out = compat.shard_map(
                 body,
-                mesh=plan.mesh,
-                axis_names=set(dp_axes),
+                plan.mesh,
+                axis_names=set(plan.mesh.axis_names),
                 in_specs=(sspecs, bspec),
                 out_specs=(sspecs, {"grad_norm": P(), "loss": P()}),
                 check_vma=False,
@@ -199,7 +222,11 @@ def make_train_step(
             sp["feedback"] = P(b)
             return sp
 
-        return train_step
+        # the manual region can't run eagerly (closed_call under shard_map is
+        # jit-only on 0.4.x), so the factory's contract — a callable that
+        # just works — needs the jit here.  jit_train_step may wrap this
+        # again with explicit shardings; nested jit is inlined at trace time.
+        return jax.jit(train_step)
 
     def train_step(state, batch):
         return step_core(state, batch, inner_plan=plan)
@@ -221,7 +248,7 @@ def jit_train_step(
     sspecs = state_specs(state, cfg, plan, opt_cfg)
     bspecs = batch_specs(batch_shapes, plan)
     shard = lambda tree: jax.tree.map(
-        lambda s: jax.NamedSharding(plan.mesh, s) if isinstance(s, P) else s,
+        lambda s: jax.sharding.NamedSharding(plan.mesh, s) if isinstance(s, P) else s,
         tree,
         is_leaf=lambda s: isinstance(s, P),
     )

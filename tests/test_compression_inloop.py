@@ -97,3 +97,127 @@ def test_int4_packing_exact():
     assert codes.size == BLOCK // 2  # two nibbles per byte
     back = dequantize_shard(codes, scale, BLOCK, 4)
     assert np.abs(np.asarray(back) - np.asarray(x)).max() <= float(scale[0]) * 0.5001
+
+
+# ---------------------------------------------------------------------------
+# bound contracts of the jit codec facade across the in-loop consumers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_int4_and_int8_edge_cases(bits):
+    """Ragged lengths, constant blocks, all-zero data, mixed magnitudes:
+    the per-block bound holds and the wire sizes follow the packing rule."""
+    from repro.core import jitmode
+
+    pol = jitmode.JitPolicy(tier=f"int{bits}", bs=64)
+    cases = [
+        np.zeros(64, np.float32),
+        np.full(200, -3.25, np.float32),  # ragged + constant
+        np.where(np.arange(130) % 2 == 0, 1e4, -1e-4).astype(np.float32),
+        np.concatenate([np.zeros(64), np.ones(64) * 7]).astype(np.float32),
+    ]
+    for x in cases:
+        c = jitmode.encode(jnp.asarray(x), pol)
+        back = np.asarray(jitmode.decode(c))
+        bound = np.asarray(c.bound())
+        nb = bound.shape[0]
+        per = np.pad(np.abs(back - x), (0, nb * 64 - x.size)).reshape(nb, 64)
+        assert (per.max(axis=1) <= bound).all(), (x[:4], per.max(), bound)
+        expect_cols = 32 if bits == 4 else 64
+        assert np.asarray(c.codes).shape == (nb, expect_cols)
+
+
+def test_kv_prefill_jit_tier_bound():
+    """Bulk prompt-KV through the predictor contest: per-token bound holds,
+    and structured (near-constant) head vectors win a tighter scale than the
+    plain absmax quantizer gives them."""
+    rng = np.random.default_rng(5)
+    hd = 64
+    flat = rng.standard_normal((128, 4, hd)).astype(np.float32)
+    offset = flat * 0.01 + 3.0  # near-constant heads: mean predictor regime
+    for x in (flat, offset):
+        c = kvcache.quantize_prefill(jnp.asarray(x))
+        back = np.asarray(kvcache.dequantize_prefill(c))
+        bound = np.asarray(c.bound())  # (..., nb)
+        err = np.abs(back - x).reshape(x.shape[:-1] + (1, hd))
+        assert (err.max(axis=-1) <= bound).all()
+    c_off = kvcache.quantize_prefill(jnp.asarray(offset))
+    q, s = kvcache.quantize_tokens(jnp.asarray(offset))
+    # midrange-based scales beat absmax-based scales on offset data
+    assert float(np.asarray(c_off.scale).mean()) < 0.5 * float(np.asarray(s).mean())
+
+
+def test_opt_state_nonneg_pointwise_relative_bound():
+    """The log2-domain second-moment path: multiplicative bound
+    v_hat/v in [2**-d, 2**d] with d the per-block bound on log2 v, and
+    exact zeros survive the roundtrip as zeros."""
+    rng = np.random.default_rng(6)
+    v = (rng.standard_normal(4096).astype(np.float32) ** 2) * np.logspace(
+        -12, 2, 4096, dtype=np.float32
+    )
+    v[::97] = 0.0
+    c = opt_state.compress_nonneg(jnp.asarray(v))
+    assert c.domain == "log2"
+    back = np.asarray(opt_state.decompress(c))
+    assert (back >= 0).all()
+    assert (back[v == 0.0] == 0.0).all()
+    nz = (v > 0) & (back > 0)
+    # per-element log error against the worst per-block bound
+    d = float(np.asarray(c.scale).max()) * 0.5 + 1e-3
+    ratio = np.abs(np.log2(back[nz] / v[nz]))
+    assert ratio.max() <= d, (ratio.max(), d)
+    # a tiny element in a block of large ones keeps its magnitude (the
+    # failure mode of the linear block-REL bound)
+    mixed = np.asarray([1.0] * 255 + [1e-9], np.float32)
+    mb = np.asarray(opt_state.decompress(opt_state.compress_nonneg(jnp.asarray(mixed))))
+    assert 0 < mb[-1] < 1e-7
+
+
+def test_compressed_reduce_tree_preserves_dtypes():
+    """Single-device mesh exercise of the full reduce schedule in-process:
+    leaf dtypes (incl. bf16) survive, values stay within the codec bound of
+    grads/dp + feedback."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compression import grad as gradc
+    from repro.parallel import compat
+
+    mesh = compat.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(7)
+    grads = {
+        "a": jnp.asarray(rng.standard_normal((33, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal(700).astype(np.float32)).astype(
+            jnp.bfloat16
+        ),
+    }
+    n = sum(int(np.size(l)) for l in jax.tree.leaves(grads))
+    fb = gradc.init_feedback(grads, 1)
+
+    def body(g, f):
+        return gradc.compressed_reduce_tree(g, f, ("data",), "int8:bs=128")
+
+    out, new_fb = compat.shard_map(
+        body,
+        mesh,
+        axis_names={"data"},
+        in_specs=(jax.tree.map(lambda _: P(), grads), P("data")),
+        out_specs=(jax.tree.map(lambda _: P(), grads), P("data")),
+        check_vma=False,
+    )(grads, fb)
+    assert out["a"].dtype == jnp.float32 and out["b"].dtype == jnp.bfloat16
+    # dp=1: reduction is identity, so out ~= grads within the codec bound
+    # (bf16 cast noise for the bf16 leaf) and feedback carries the residual
+    ref = np.asarray(grads["a"]).reshape(-1)
+    got = np.asarray(out["a"], np.float32).reshape(-1)
+    assert np.abs(ref - got).max() < 0.05
+    assert float(jnp.abs(new_fb).max()) > 0.0  # residual is being carried
+
+
+def test_collective_bytes_model():
+    from repro.compression.grad import collective_bytes
+
+    acc = collective_bytes(1 << 20, dp=8, policy=8)
+    assert acc["cut_vs_bf16_allreduce"] >= 1.3
+    acc4 = collective_bytes(1 << 20, dp=8, policy=4)
+    assert acc4["cut_vs_bf16_allreduce"] > acc["cut_vs_bf16_allreduce"]

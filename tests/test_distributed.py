@@ -3,8 +3,14 @@ count must be set before jax initializes, and the main test process keeps 1
 device per the harness contract).
 
 Covers: sharded-vs-single-device train-step parity, MoE expert-parallel
-parity, compressed-gradient DP reduction, and elastic restore onto a
-different mesh.
+parity, compressed-gradient DP reduction (including >=20-step loss-trajectory
+parity against the uncompressed schedule), and elastic restore onto a
+different mesh (full-leaf and chunk-range paths).
+
+The mesh preamble goes through repro.parallel.compat, which bridges the
+explicit-sharding API gap between jax releases (jax.sharding.AxisType /
+get_abstract_mesh on new jax, jax.experimental.shard_map on 0.4.x) — these
+tests run on either, so there is no version skip.
 """
 import os
 import subprocess
@@ -12,25 +18,9 @@ import sys
 import textwrap
 from pathlib import Path
 
-import jax
 import pytest
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
-
-# The sharded-training path (parallel/plan.py, launch/mesh.py) uses the
-# explicit-sharding APIs (jax.sharding.AxisType, get_abstract_mesh) that
-# landed after jax 0.4.x; on older installs the subprocess harness dies at
-# import time, which is an environment limitation, not a code regression.
-_NEEDS = ("AxisType", "get_abstract_mesh")
-_HAVE_EXPLICIT_SHARDING = all(hasattr(jax.sharding, a) for a in _NEEDS)
-requires_explicit_sharding = pytest.mark.skipif(
-    not _HAVE_EXPLICIT_SHARDING,
-    reason=(
-        "installed jax lacks jax.sharding.{AxisType,get_abstract_mesh} "
-        "(explicit-sharding API); the sharded train/restore paths cannot "
-        "run — upgrade jax to re-enable these 3 distributed tests"
-    ),
-)
 
 
 def _run(body: str, timeout=600):
@@ -43,11 +33,10 @@ def _run(body: str, timeout=600):
         from repro import models
         from repro.data import make_pipeline
         from repro.optim import AdamWConfig
-        from repro.parallel import ParallelPlan
+        from repro.parallel import ParallelPlan, compat
         from repro.parallel.specs import param_specs
         from repro.train.step import init_train_state, make_train_step, jit_train_step
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"), auto_axis_types=True)
         """
     ) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=SRC)
@@ -60,7 +49,6 @@ def _run(body: str, timeout=600):
 
 
 @pytest.mark.slow
-@requires_explicit_sharding
 def test_sharded_train_matches_single_device():
     out = _run(
         """
@@ -91,21 +79,30 @@ def test_sharded_train_matches_single_device():
 
 
 @pytest.mark.slow
-@requires_explicit_sharding
 def test_moe_expert_parallel_parity():
     out = _run(
         """
+        from repro.models import moe as moe_mod
         cfg = configs.get_smoke("deepseek-moe-16b")
         plan1 = ParallelPlan()
         plan8 = ParallelPlan(mesh=mesh, batch_axes=("data",))
         params = models.init_params(jax.random.PRNGKey(0), cfg, plan1)
         pipe = make_pipeline(cfg, seq=16, global_batch=4)
         batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        # Expert capacity is computed from the LOCAL token count inside each
+        # shard, so with the default factor the two layouts drop different
+        # tokens and their losses legitimately differ.  The parity invariant
+        # is drop-free routing: with ample capacity both layouts compute the
+        # same function and must agree to numerical noise.
+        ld1 = float(models.loss_fn(params, batch, cfg, plan1))
+        ld8 = float(models.loss_fn(params, batch, cfg, plan8))
+        print("default-capacity l1", ld1, "l8", ld8)
+        assert abs(ld1 - ld8) < 0.5  # per-shard capacity drops: loose band
+        moe_mod.CAPACITY_FACTOR = 16.0  # drop-free on both layouts
         l1 = float(models.loss_fn(params, batch, cfg, plan1))
         l8 = float(models.loss_fn(params, batch, cfg, plan8))
-        print("l1", l1, "l8", l8)
-        # EP capacity is per-shard in the 8-device run; small drop differences
-        assert abs(l1 - l8) < 0.1  # capacity-drop differences per shard
+        print("drop-free l1", l1, "l8", l8)
+        assert abs(l1 - l8) < 5e-3
         print("MOE PARITY OK")
         """
     )
@@ -113,15 +110,12 @@ def test_moe_expert_parallel_parity():
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    reason="XLA-CPU SPMD bug: partial-manual shard_map (dp manual, model "
-    "auto) around remat+scan train bodies aborts with 'Invalid binary "
-    "instruction opcode copy' (hlo_instruction.cc:1558). The compressed-DP "
-    "algorithm itself is validated in tests/test_compression_inloop.py and "
-    "benchmarks/bench_integrations.py; re-enable on TPU/Shardy backends.",
-    run=False,
-)
 def test_grad_compressed_train_step_runs_and_converges():
+    """The compressed-DP region compiles and trains on a real (fake-device)
+    mesh: full-manual shard_map, psum_scatter -> error-feedback jit-codec
+    encode -> all_gather.  Historic note: the partial-manual (dp manual,
+    model auto) formulation aborted XLA-CPU's SPMD partitioner; the region
+    is manual over ALL axes now, which compiles everywhere."""
     out = _run(
         """
         cfg = configs.get_smoke("qwen1.5-0.5b")
@@ -144,7 +138,45 @@ def test_grad_compressed_train_step_runs_and_converges():
 
 
 @pytest.mark.slow
-@requires_explicit_sharding
+def test_compressed_trajectory_matches_uncompressed():
+    """>=20 sharded steps with --compress-grads-style int8 policy: the loss
+    trajectory must track the uncompressed schedule within a small band
+    (error feedback keeps the compression error zero-mean, so trajectories
+    stay close rather than drifting)."""
+    out = _run(
+        """
+        cfg = configs.get_smoke("qwen1.5-0.5b")
+        opt = AdamWConfig(lr=1e-3, weight_decay=0.0)
+        pipe = make_pipeline(cfg, seq=16, global_batch=4)
+        N = 20
+
+        def run(plan):
+            state = init_train_state(jax.random.PRNGKey(0), cfg, plan, opt)
+            step = make_train_step(cfg, plan, opt, total_steps=N)
+            losses = []
+            for k in range(N):
+                batch = {k2: jnp.asarray(v)
+                         for k2, v in pipe.batch_at(k % 4).items()}
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            return losses
+
+        base = run(ParallelPlan(mesh=mesh, batch_axes=("data",)))
+        comp = run(ParallelPlan(mesh=mesh, batch_axes=("data",),
+                                grad_policy="int8:bs=512"))
+        worst = max(abs(a - b) for a, b in zip(base, comp))
+        print("worst |delta loss| over", len(base), "steps:", worst)
+        assert len(base) >= 20
+        assert worst < 0.05, (base, comp)
+        # and both actually trained
+        assert base[-1] < base[0] - 0.2 and comp[-1] < comp[0] - 0.2
+        print("TRAJECTORY OK")
+        """
+    )
+    assert "TRAJECTORY OK" in out
+
+
+@pytest.mark.slow
 def test_elastic_restore_to_different_mesh(tmp_path):
     out = _run(
         f"""
@@ -177,3 +209,44 @@ def test_elastic_restore_to_different_mesh(tmp_path):
         """
     )
     assert "ELASTIC OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_chunk_range_restore_on_new_mesh(tmp_path):
+    """restore_resharded decodes compressed leaves straight onto a CHANGED
+    mesh: chunk-range reads for the big lossy leaves, value-identical to a
+    full decompress + device_put."""
+    out = _run(
+        f"""
+        import numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.ft import CheckpointManager
+        from repro.ft import elastic
+        rng = np.random.default_rng(0)
+        state = {{
+            "opt": {{"m": {{"w": np.cumsum(
+                rng.normal(size=(4096, 512)).astype(np.float32), 0) * 1e-3}}}},
+            "params": {{"w": rng.normal(size=(256, 64)).astype(np.float32)}},
+        }}
+        mgr = CheckpointManager(r"{tmp_path}", use_async=False)
+        mgr.save(3, state)
+        mesh4 = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:4]).reshape(4, 1), ("data", "model"))
+        specs = {{"opt": {{"m": {{"w": P("data", None)}}}}, "params": {{"w": P()}}}}
+        tpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        out, extra, rep = elastic.restore_resharded(mgr, tpl, specs, mesh4, 3)
+        print(rep.summary())
+        assert rep.leaves["opt/m/w"].mode == "chunk-range", rep.leaves
+        assert rep.leaves["opt/m/w"].bytes_read < rep.leaves["opt/m/w"].bytes_full
+        # differential: identical to full decode + device_put on the new mesh
+        host, _ = mgr.restore(jax.tree.map(
+            lambda x: np.zeros(x.shape, x.dtype), state))
+        ref = jax.tree.map(
+            lambda h, s: jax.device_put(h, NamedSharding(mesh4, s)),
+            host, specs, is_leaf=lambda x: isinstance(x, np.ndarray))
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("CHUNK RANGE RESHARD OK")
+        """
+    )
+    assert "CHUNK RANGE RESHARD OK" in out
